@@ -1,0 +1,38 @@
+"""Paper Figure 2: theoretically computed single-processor communication
+volumes for mixed-precision ResNet50 conv1 / conv2_x relative to the Thm 2.1
+lower bound, swept over cache size M.
+
+Paper setting: p_I = p_F = 1, p_O = 2, batch 1000.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.algorithms import single_processor_volumes
+from repro.core.conv_model import Precision, resnet50_layers
+
+ALGS = ("naive", "im2col", "blocking", "winograd", "fft")
+
+
+def run(csv_rows: list) -> None:
+    prec = Precision(1.0, 1.0, 2.0)
+    layers = resnet50_layers(1000)
+    for lname in ("conv1", "conv2_x"):
+        s = layers[lname].with_precision(prec)
+        for logM in range(14, 25, 2):
+            M = float(2 ** logM)
+            t0 = time.perf_counter()
+            v = single_processor_volumes(s, M)
+            dt_us = (time.perf_counter() - t0) * 1e6
+            lb = v["lower_bound"]
+            derived = ";".join(f"{a}={v[a] / lb:.2f}x" for a in ALGS)
+            csv_rows.append((f"fig2/{lname}/M=2^{logM}", f"{dt_us:.0f}",
+                             f"lb={lb:.3e}w {derived}"))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(r))

@@ -1,0 +1,54 @@
+"""Paper Figure 4 analogue: LP-optimized tiling vs vendor-style tiling on the
+five standard ResNet50 convolution sizes, under the GEMMINI buffer model
+(256 KiB scratchpad / 64 KiB accumulator, double-buffered, int8 inputs with
+32-bit accumulation) and under the TPU VMEM model.
+
+The paper measures scratchpad-row traffic on FireSim; with no accelerator in
+this container we report the same *estimated communication* the paper uses as
+its energy proxy ("our system consistently uses between 45% and 85% as much
+estimated communication compared to the vendor tiling"). The vendor proxy is
+a greedy channel-first power-of-two tiler (the shape GEMMINI's supplied
+tiler produces when it cannot reason about reuse).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.conv_model import INT8_ACC32, BF16_ACC32, resnet50_layers
+from repro.core.tiling import GEMMINI, TPU_VMEM, Blocking, optimize_blocking
+
+
+def vendor_tiling(shape, mem) -> Blocking:
+    d = Blocking.lifted_bounds(shape)
+    b = {k: 1 for k in d}
+    for k in ("cO", "cI", "wO", "hO", "N"):
+        while b[k] * 2 <= d[k]:
+            b[k] *= 2
+            if not Blocking(b, shape).fits(mem):
+                b[k] //= 2
+                break
+    return Blocking(b, shape)
+
+
+def run(csv_rows: list) -> None:
+    for mem_name, mem, prec in (("gemmini", GEMMINI, INT8_ACC32),
+                                ("tpu_vmem", TPU_VMEM, BF16_ACC32)):
+        for lname, s in resnet50_layers(1000).items():
+            s = s.with_precision(prec)
+            t0 = time.perf_counter()
+            ours = optimize_blocking(s, mem)
+            dt_us = (time.perf_counter() - t0) * 1e6
+            vend = vendor_tiling(s, mem)
+            ours_v, vend_v = ours.comm_volume(), vend.comm_volume()
+            csv_rows.append((
+                f"fig4/{mem_name}/{lname}", f"{dt_us:.0f}",
+                f"ours={ours_v:.3e}w vendor={vend_v:.3e}w "
+                f"ratio={ours_v / vend_v:.2f} tile={ours.as_conv_tile()}"))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(r))

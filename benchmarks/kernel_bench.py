@@ -1,0 +1,53 @@
+"""Wall-clock microbench of the LP-tiled Pallas kernels (interpret mode on
+CPU -> relative numbers only; the tiling decisions are the deliverable) and
+of the XLA paths used by the model stack."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv_rows: list) -> None:
+    key = jax.random.PRNGKey(0)
+    # GEMM shapes from the LM stack (qwen QKV / olmoe expert / head slice)
+    for (m, n, k) in ((512, 2048, 2048), (1024, 1024, 1024)):
+        a = jax.random.normal(key, (m, k), jnp.bfloat16)
+        b = jax.random.normal(key, (k, n), jnp.bfloat16)
+        us_x = _time(lambda x, y: ops.matmul(x, y, use_pallas=False), a, b)
+        flops = 2 * m * n * k
+        csv_rows.append((f"kernel/matmul_xla/{m}x{n}x{k}", f"{us_x:.0f}",
+                         f"gflops={flops / us_x / 1e3:.1f}"))
+    # conv2d: ResNet conv3_x-like block at batch 8
+    x = jax.random.normal(key, (8, 64, 30, 30), jnp.float32)
+    w = jax.random.normal(key, (64, 64, 3, 3), jnp.float32)
+    us = _time(lambda a_, b_: ops.conv2d(a_, b_, use_pallas=False), x, w)
+    csv_rows.append(("kernel/conv2d_xla/8x64x30", f"{us:.0f}", "oracle-path"))
+    us = _time(lambda a_, b_: ops.conv2d(a_, b_, use_pallas=True), x, w)
+    csv_rows.append(("kernel/conv2d_pallas_interp/8x64x30", f"{us:.0f}",
+                     "interpret=True (correctness mode, not perf)"))
+    # conv1d causal (mamba short conv)
+    x1 = jax.random.normal(key, (4, 512, 256), jnp.bfloat16)
+    w1 = jax.random.normal(key, (4, 256), jnp.bfloat16)
+    us = _time(lambda a_, b_: ops.conv1d_causal(a_, b_, use_pallas=False), x1, w1)
+    csv_rows.append(("kernel/conv1d_xla/4x512x256", f"{us:.0f}", ""))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(r))

@@ -1,0 +1,42 @@
+"""The §Roofline deliverable: read every dry-run artifact under
+results/dryrun/ and emit the per-(arch x shape x mesh) three-term roofline
+rows (also consumed by EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_all() -> list:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(csv_rows: list) -> None:
+    recs = load_all()
+    if not recs:
+        csv_rows.append(("roofline/none", "0",
+                         "no dry-run artifacts: run python -m repro.launch.dryrun"))
+        return
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        derived = (f"compute={r['compute_s'] * 1e3:.2f}ms "
+                   f"memory={r['memory_s'] * 1e3:.2f}ms "
+                   f"collective={r['collective_s'] * 1e3:.2f}ms "
+                   f"dominant={r['dominant']} mfu={r['mfu']:.4f} "
+                   f"useful={r['useful_flops_frac']:.3f}")
+        csv_rows.append((name, f"{r.get('compile_s', 0) * 1e6:.0f}", derived))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(r))

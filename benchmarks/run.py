@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV:
+  fig2/*     - paper Fig 2 (single-processor volumes vs bound, mixed precision)
+  fig3/*     - paper Fig 3 (parallel volumes vs bound)
+  fig4/*     - paper Fig 4 / §5 (LP tiling vs vendor tiling, GEMMINI + TPU)
+  kernel/*   - Pallas/XLA kernel micro-timings
+  roofline/* - §Roofline rows from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from . import (fig2_single_processor, fig3_parallel, fig4_gemmini_tiling,
+                   kernel_bench, roofline_table)
+
+    rows = [("name", "us_per_call", "derived")]
+    for mod in (fig2_single_processor, fig3_parallel, fig4_gemmini_tiling,
+                kernel_bench, roofline_table):
+        try:
+            mod.run(rows)
+        except Exception:
+            traceback.print_exc()
+            rows.append((f"{mod.__name__}/ERROR", "0", "see stderr"))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,243 @@
+"""Regenerate EXPERIMENTS.md §Dry-run / §Roofline tables and the §Perf log
+from results/dryrun/*.json. Idempotent; run after any dry-run/perf pass.
+
+    PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import report  # noqa: E402
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+RESULTS = os.path.join(REPO, "results", "dryrun")
+
+PERF_ENTRIES = [
+    # (cell-title, variant, hypothesis, outcome)
+    ("olmoe-1b-7b × train_4k (most collective-bound: 16.29s collective term, "
+     "814 GB/chip wire)",
+     "moe_g4096",
+     "The GShard combine/dispatch one-hots are (G,Tg,E,C) with C ∝ Tg, so "
+     "total size ∝ T·Tg·k·f. Shrinking groups 256→4096 (Tg 4096→256) cuts "
+     "the tensors 16× and with them the partial-sum all-reduces GSPMD emits "
+     "on the G↔E reshard. Predicted ≥5× collective reduction.",
+     "CONFIRMED: collective −78.8% (16.29s → 3.46s), compute −52% (smaller "
+     "one-hot einsums), memory −40%. step-time −78.8%, roofline-MFU "
+     "0.0098 → 0.0462 (4.7×)."),
+    ("olmoe-1b-7b × train_4k",
+     "moe_hints",
+     "The all-reduce volume is GSPMD *replicating* the big one-hots when "
+     "resolving the G-sharded → E-sharded einsum chain. Pinning the dispatch "
+     "path with with_sharding_constraint (G on (data,model), E on model) "
+     "should force all-to-alls instead. Predicted ~2× collective cut alone.",
+     "CONFIRMED: collective −56.5% (16.29s → 7.09s) with no other term "
+     "changing (+1% compute, +5% memory)."),
+    ("olmoe-1b-7b × train_4k",
+     "moe_g4096_hints",
+     "The two mechanisms are independent (size × routing) and should "
+     "compose.",
+     "CONFIRMED: collective −84.4% (16.29s → 2.54s); **dominant term flipped "
+     "collective → memory** — the hillclimb on the collective term is "
+     "converged; step-time 16.29s → 3.46s (now memory-bound)."),
+    ("qwen2.5-3b × train_4k (memory-dominant dense train)",
+     "noseqshard",
+     "Ablation of our default sequence-parallel activation sharding "
+     "(P(data, model, None)): without it, every norm/residual is replicated "
+     "16× across `model`. Predict ≥3× memory-term regression (this is the "
+     "baseline-vs-paper-faithful comparison: the paper's §4.2 blocking has "
+     "no SP notion).",
+     "CONFIRMED: memory +375% (3.53s → 16.76s), collective +269%, MFU "
+     "0.120 → 0.025. Our SP default is a 4.75× step-time optimization over "
+     "the non-SP layout."),
+    ("qwen2.5-3b × train_4k",
+     "bf16params",
+     "bf16 parameter storage (f32 optimizer moments kept) halves parameter "
+     "HBM traffic; params are ~1% of train bytes at 1M tokens/step, so "
+     "predict ≤2% gain — run to measure, expect ~neutral.",
+     "REFUTED (as suspected): +0.6% memory — parameter bytes are noise "
+     "next to activations at this batch; kept f32 params as default."),
+    ("stablelm-1.6b × decode_32k (worst roofline-MFU: 5.2e-5)",
+     "fusedkv",
+     "One fused (B,KV,L,2,hd) cache halves the dynamic-update-slice count "
+     "per step (2 DUS → 1). Predicted ~2× cut of the DUS-dominated bytes.",
+     "REFUTED: memory +187%. The fused layout forces a stack(k,v) copy on "
+     "write and — decisive — strided reads ckv[...,0,:] / ckv[...,1,:] that "
+     "materialize full-cache slices on every layer. Split caches read "
+     "in-place; fused caches pay two extra full-cache copies. Reverted "
+     "(flag kept for the record)."),
+    ("stablelm-1.6b × decode_32k",
+     "batchonly",
+     "Control experiment: unshard the cache length axis (batch-only "
+     "sharding). Cache/chip grows 16×; predicted large memory regression.",
+     "CONFIRMED (as a negative control): memory +1087%, and GSPMD now "
+     "emits 2.06s of collectives (cache gathers). Sequence-sharded KV with "
+     "GSPMD's flash-decode all-reduce pattern is the right production "
+     "layout."),
+    ("qwen2.5-3b × decode_32k",
+     "f32compute",
+     "Decode hlo_bytes are dominated by bf16→f32 `convert`s of cache/weight "
+     "tensors (75.8 GB of convert results found by opcode profiling). If "
+     "those converts come from the *compute* dtype, f32 compute should "
+     "remove them.",
+     "REFUTED: byte-identical terms (−0.0%). The converts are the CPU "
+     "backend's bf16 *storage* legalization, independent of compute dtype — "
+     "quantifying them as a measurement artifact that a real TPU (native "
+     "bf16) does not pay. Recorded as a §Roofline caveat, not a real "
+     "bottleneck."),
+]
+
+
+def _summary_table() -> str:
+    cells = [
+        ("olmoe_1b_7b", "train_4k", "moe_g4096_hints", "most collective-bound"),
+        ("stablelm_1_6b", "decode_32k", None, "worst roofline fraction"),
+        ("jamba_1_5_large", "train_4k", "moe_g4096_hints", "paper-representative"),
+    ]
+    rows = ["| cell (criterion) | baseline step / MFU | optimized step / MFU | Δ |",
+            "|---|---|---|---|"]
+    for arch, shape, var, why in cells:
+        bfn = os.path.join(RESULTS, f"{arch}__{shape}__16x16.json")
+        if not os.path.exists(bfn):
+            continue
+        b = json.load(open(bfn))
+        if var and os.path.exists(bfn.replace(".json", f"__{var}.json")):
+            v = json.load(open(bfn.replace(".json", f"__{var}.json")))
+            rows.append(
+                f"| {arch} × {shape} ({why}) "
+                f"| {b['step_time_s']:.2f}s / {b['mfu']:.4f} "
+                f"| {v['step_time_s']:.2f}s / {v['mfu']:.4f} "
+                f"| **{(1 - v['step_time_s'] / b['step_time_s']) * 100:.0f}% "
+                f"step time** |")
+        else:
+            rows.append(
+                f"| {arch} × {shape} ({why}) "
+                f"| {b['step_time_s'] * 1e3:.1f}ms / {b['mfu']:.4f} "
+                f"| (all tried variants regressed — baseline layout is the "
+                f"optimum found; see log) | — |")
+    return "\n".join(rows)
+
+
+def perf_block() -> str:
+    out = []
+    out.append(
+        "**Paper-faithful baseline vs beyond-paper optimized, per cell:**\n")
+    out.append(_summary_table())
+    out.append(
+        "\nThe *baseline* is the paper-faithful configuration: LP-derived "
+        "tiling + LP-ranked sharding (batch→data, features/experts→model), "
+        "remat, chunked CE — i.e. the paper's machinery applied as-is. The "
+        "*optimized* columns add beyond-paper changes (MoE dispatch-group "
+        "sizing + pinned dispatch shardings) the paper does not discuss.\n")
+    out.append(
+        "Methodology: hypothesis → napkin math → change → re-lower → "
+        "compare (scripts/perf_iter.py). Variant artifacts live next to the "
+        "baselines as `*__<variant>.json`. Three cells were picked per the "
+        "assignment (worst roofline fraction, most collective-bound, most "
+        "paper-representative); negative results are kept — a refuted "
+        "hypothesis pins down the measurement model.\n")
+    cur = None
+    for cell, variant, hyp, res in PERF_ENTRIES:
+        if cell != cur:
+            out.append(f"\n### {cell}\n")
+            cur = cell
+        out.append(f"**[{variant}]**")
+        out.append(f"- *Hypothesis:* {hyp}")
+        out.append(f"- *Result:* {res}\n")
+    # jamba entries are appended programmatically when present
+    jn = os.path.join(RESULTS, "jamba_1_5_large__train_4k__16x16.json")
+    out.append(_jamba_block(jn))
+    return "\n".join(out)
+
+
+def _jamba_block(base_fn: str) -> str:
+    if not os.path.exists(base_fn):
+        return ("\n### jamba-1.5-large × train_4k (paper-representative: "
+                "mamba conv1d + MoE + attention)\n\nBaseline cell pending "
+                "(longest compile of the sweep).")
+    with open(base_fn) as f:
+        b = json.load(f)
+    lines = [
+        "\n### jamba-1.5-large × train_4k (paper-representative: mamba "
+        "conv1d + MoE + attention)\n",
+        f"Baseline: compute {b['compute_s']*1e3:.0f}ms / memory "
+        f"{b['memory_s']*1e3:.0f}ms / collective {b['collective_s']*1e3:.0f}ms "
+        f"→ dominant **{b['dominant']}**, roofline-MFU {b['mfu']:.4f}, "
+        f"useful-FLOP fraction {b['useful_flops_frac']:.3f} "
+        f"(SSD chunk {b.get('chunk_size', '?')}).",
+    ]
+    lines.append(
+        "\n*Hypotheses:* (1) **[moe_g4096_hints]** jamba's MoE layers share "
+        "olmoe's pathology — G=256 groups make (G,Tg,E,C) one-hots huge and "
+        "GSPMD replicates them across `model`; smaller groups + pinned "
+        "dispatch shardings should collapse the 95s collective term. "
+        "*Result:* CONFIRMED — collective −36.3% (95.2s → 60.7s), MFU "
+        "0.122 → 0.191 (+57%). Smaller relative win than olmoe: jamba's "
+        "collective also carries 398B-param gradient reduction and mamba "
+        "activation reshards that the MoE fix does not touch. "
+        "(2) **[chunk1024]** halving the SSD chunk (2048→1024) should cut "
+        "the (B,c,c,H) decay traffic ~2× on the mamba share. *Result:* "
+        "REFUTED — step +1.7%: the per-chunk decay tensor shrinks 4× but "
+        "there are 2× more chunks and the inter-chunk state/carry terms "
+        "double; net memory +2.1%. The SSD chunk sweet spot is flat near "
+        "c≈2k for these shapes, so the LP-style capacity reasoning (bigger "
+        "tiles amortize) wins again.\n\n"
+        "*Residual attribution* (op_name profiling of the optimized R=1 "
+        "program): the remaining collective volume is ~60% backward-pass "
+        "all-gathers (`transpose(jvp)` — re-gathering sequence-sharded "
+        "activations for weight-gradient dots) and ~40% forward dot "
+        "all-gathers at the SP↔TP boundary. Both are the textbook "
+        "sequence-parallel gather/scatter pairs that XLA's latency-hiding "
+        "scheduler overlaps with the surrounding GEMMs on real TPUs — the "
+        "roofline's no-overlap assumption (step = max of terms) makes them "
+        "look like a hard wall here. Next lever on hardware: "
+        "reduce-scatter'ed weight-grad accumulation (ZeRO-2) to halve the "
+        "backward gather volume.\n")
+    for variant in ("moe_g4096_hints", "chunk1024"):
+        fn = base_fn.replace(".json", f"__{variant}.json")
+        if os.path.exists(fn):
+            with open(fn) as f:
+                v = json.load(f)
+            lines.append(
+                f"- **[{variant}]** step {b['step_time_s']:.2f}s → "
+                f"{v['step_time_s']:.2f}s ({(v['step_time_s']/b['step_time_s']-1)*100:+.1f}%), "
+                f"memory {(v['memory_s']/b['memory_s']-1)*100:+.1f}%, "
+                f"collective {(v['collective_s']/b['collective_s']-1)*100:+.1f}%, "
+                f"MFU {b['mfu']:.4f} → {v['mfu']:.4f}.")
+    return "\n".join(lines)
+
+
+def main():
+    recs = report.load("base")
+    md = open(os.path.join(REPO, "EXPERIMENTS.md")).read()
+
+    n_single = sum(1 for r in recs if r["mesh"] == "16x16")
+    n_multi = sum(1 for r in recs if r["mesh"] == "2x16x16")
+    dr = (f"**{n_single} cells on 16×16 (256 chips) and {n_multi} on "
+          f"2×16×16 (512 chips) lowered + compiled green.**\n\n"
+          + report.dryrun_table(recs))
+    md = md.split("<!-- DRYRUN_TABLE -->")[0] + "<!-- DRYRUN_TABLE -->\n" + dr \
+        + "\n\n## §Roofline — single-pod (16×16 = 256 chips)" \
+        + md.split("## §Roofline — single-pod (16×16 = 256 chips)", 1)[1]
+
+    rt = report.roofline_table(recs, "16x16")
+    picks = report.pick_hillclimb_cells(recs)
+    picks_txt = "\n".join(
+        f"- **{k}** → {v['arch']} × {v['shape']} (MFU {v['mfu']:.4f}, "
+        f"dominant {v['dominant']})" for k, v in picks.items())
+    rl_block = rt + "\n\n**Hillclimb cell selection:**\n" + picks_txt
+    md = md.split("<!-- ROOFLINE_TABLE -->")[0] + "<!-- ROOFLINE_TABLE -->\n" \
+        + rl_block + "\n\n## §Perf — hillclimb log (3 cells)\n\n" \
+        + "<!-- PERF_SECTION -->\n" + perf_block() + "\n"
+
+    with open(os.path.join(REPO, "EXPERIMENTS.md"), "w") as f:
+        f.write(md)
+    print(f"EXPERIMENTS.md regenerated: {len(recs)} base records, "
+          f"{len(glob.glob(os.path.join(RESULTS, '*__*__*__*.json')))} variants")
+
+
+if __name__ == "__main__":
+    main()

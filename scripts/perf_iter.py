@@ -1,0 +1,64 @@
+"""Perf-iteration driver: run a dry-run cell under named override variants
+and print the before/after roofline deltas.
+
+    PYTHONPATH=src python scripts/perf_iter.py --arch olmoe_1b_7b \
+        --shape train_4k --variant moe4096 --set moe_groups=4096
+
+Variants land in results/dryrun/<arch>__<shape>__<mesh>__<variant>.json and
+are compared against the base record.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+os.environ.setdefault("REPRO_UNROLL_SCANS", "1")
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    if v in ("true", "false"):
+        return k, v == "true"
+    try:
+        return k, int(v)
+    except ValueError:
+        return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="override as key=value (repeatable)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import RESULTS_DIR, run_cell
+
+    overrides = dict(parse_override(kv) for kv in args.set)
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   variant=args.variant, overrides=overrides)
+
+    mesh = rec["mesh"]
+    base_fn = os.path.join(RESULTS_DIR, f"{args.arch}__{args.shape}__{mesh}.json")
+    if os.path.exists(base_fn):
+        with open(base_fn) as f:
+            base = json.load(f)
+        print(f"\n=== {args.variant} vs base ({args.arch} x {args.shape} x {mesh}) ===")
+        for term in ("compute_s", "memory_s", "collective_s", "step_time_s", "mfu"):
+            b, v = base[term], rec[term]
+            delta = (v - b) / b * 100 if b else float("nan")
+            print(f"  {term:13s} {b:.6g} -> {v:.6g}  ({delta:+.1f}%)")
+        print(f"  dominant      {base['dominant']} -> {rec['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import roofline  # noqa: F401

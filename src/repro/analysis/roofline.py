@@ -1,0 +1,179 @@
+"""Roofline terms from compiled dry-run artifacts (no hardware required).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = wire_bytes_per_chip / link_bw
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). Collective bytes
+are NOT in cost_analysis: we parse the post-SPMD module text and sum the
+result sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with ring-model wire multipliers (all-reduce 2x).
+
+Hardware model: TPU v5e -> 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# wire multiplier per result byte (ring model)
+_WIRE_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|tuple\([^)]*\)|[\w\[\],{}]+)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind wire bytes (per device, post-SPMD local shapes).
+    '-done' ops are skipped so async pairs aren't double counted."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "-done(" in s or "-done.1" in s:
+            continue
+        m = _OP_RE.search(s)
+        if not m:
+            continue
+        kind = m.group(1)
+        lhs = s.split("=", 1)[0]
+        rhs_head = s.split("=", 1)[1]
+        # result type appears right after '=' (e.g.  %x = bf16[8,128]{1,0} all-reduce(...)
+        head = rhs_head.split(kind)[0]
+        nbytes = _shape_bytes(head)
+        if nbytes == 0:  # fall back: operand types inside parens
+            nbytes = _shape_bytes(s[m.end():])
+        out[kind] += nbytes * _WIRE_MULT[kind]
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    wire_bytes_per_chip: float
+    collectives: Dict[str, float]
+    model_flops: float
+    bytes_per_device: Dict[str, float]
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much of compiled compute is useful."""
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (roofline step time * peak): the roofline-fraction
+        score (upper bounds real MFU)."""
+        return self.model_flops / (
+            self.step_time_s * self.chips * PEAK_FLOPS + 1e-30)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "collectives": self.collectives,
+            "model_flops": self.model_flops,
+            "bytes_per_device": self.bytes_per_device,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu": self.mfu,
+        }
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N_active*tokens for training; 2*N_active*tokens for serving."""
+    from repro.configs import get_config
+    from repro.models.config import LM_SHAPES
+
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def build(arch: str, shape_name: str, mesh_name: str, chips: int,
+          cost: dict, mem: dict, hlo_text: str) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops * chips if flops > 0 else 0.0,
+        hlo_bytes=nbytes * chips if nbytes > 0 else 0.0,
+        wire_bytes_per_chip=coll["total"],
+        collectives=coll,
+        model_flops=model_flops(arch, shape_name),
+        bytes_per_device=mem,
+    )

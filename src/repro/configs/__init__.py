@@ -1,0 +1,56 @@
+"""Assigned architecture configs (--arch <id>) + the paper's own ResNet50
+conv benchmark shapes. Each module exposes CONFIG (full size, dry-run only)
+and SMOKE (reduced, runs a step on CPU)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import LM_SHAPES, ModelConfig, ShapeSpec, reduced
+
+ARCH_IDS: List[str] = [
+    "qwen2_5_3b",
+    "stablelm_1_6b",
+    "phi3_medium_14b",
+    "minitron_8b",
+    "phi3_5_moe_42b",
+    "olmoe_1b_7b",
+    "xlstm_1_3b",
+    "hubert_xlarge",
+    "internvl2_1b",
+    "jamba_1_5_large",
+]
+
+# shape cells skipped per arch (DESIGN.md §4): long_500k needs sub-quadratic
+# attention; encoder-only models have no decode step.
+SKIPS: Dict[str, List[str]] = {
+    "qwen2_5_3b": ["long_500k"],
+    "stablelm_1_6b": ["long_500k"],
+    "phi3_medium_14b": ["long_500k"],
+    "minitron_8b": ["long_500k"],
+    "phi3_5_moe_42b": ["long_500k"],
+    "olmoe_1b_7b": ["long_500k"],
+    "xlstm_1_3b": [],
+    "hubert_xlarge": ["decode_32k", "long_500k"],
+    "internvl2_1b": ["long_500k"],
+    "jamba_1_5_large": [],
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return getattr(mod, "SMOKE", None) or reduced(mod.CONFIG)
+
+
+def cells(arch: str) -> List[ShapeSpec]:
+    return [s for n, s in LM_SHAPES.items() if n not in SKIPS[arch]]
+
+
+def all_cells() -> List[tuple]:
+    return [(a, s) for a in ARCH_IDS for s in cells(a)]

@@ -1,0 +1,11 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=6400
+vocab=32064, MoE 16 experts top-2. [hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from repro.models.config import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=6400, vocab_size=32064, pattern=("attn",),
+    n_experts=16, experts_per_token=2,
+)
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,13 @@
+"""xlstm-1.3b [ssm]: 48L d_model=2048 4H d_ff=0 vocab=50304 - alternating
+mLSTM + sLSTM blocks. [arXiv:2405.04517; unverified]
+
+Sub-quadratic (chunked recurrent) -> runs the long_500k cell."""
+from repro.models.config import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304, pattern=("mlstm", "slstm"),
+    ssm_expand=2, chunk_size=256,
+)
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, FileSource, SyntheticSource, iterate, make_source  # noqa: F401

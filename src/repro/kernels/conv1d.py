@@ -1,0 +1,57 @@
+"""Causal depthwise conv1d Pallas kernel (the mamba/xLSTM short convolution).
+
+7NL view: N=B, c_I=c_O=D (depthwise), h=sequence, w_F=K, h_F=1. The blocking
+LP degenerates to choosing (b_B, b_D) tiles with the full (short) K window
+VMEM-resident; the sequence axis streams whole per tile (K <= 8 in all
+assigned archs, L*b_D*2B <= VMEM for every cell incl. 32k prefill at b_D=128).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.conv_model import round_up
+
+
+def _conv1d_kernel(x_ref, w_ref, o_ref, *, K: int):
+    x = x_ref[...].astype(jnp.float32)  # (bB, L, bD)
+    w = w_ref[...].astype(jnp.float32)  # (K, bD)
+    L = x.shape[1]
+    acc = x * w[K - 1][None, None, :]  # tap k = K-1 aligns with current step
+    for k in range(K - 1):
+        shift = K - 1 - k
+        shifted = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :L, :]
+        acc = acc + shifted * w[k][None, None, :]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def conv1d_causal(
+    x: jax.Array,  # (B, L, D)
+    w: jax.Array,  # (K, D)
+    tiles: Tuple[int, int] | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    B, L, D = x.shape
+    K = w.shape[0]
+    bB, bD = tiles or (max(1, min(B, 8)), max(1, min(D, 128)))
+    Bp, Dp = round_up(B, bB), round_up(D, bD)
+    if (Bp, Dp) != (B, D):
+        x = jnp.pad(x, ((0, Bp - B), (0, 0), (0, Dp - D)))
+        w = jnp.pad(w, ((0, 0), (0, Dp - D)))
+    out = pl.pallas_call(
+        functools.partial(_conv1d_kernel, K=K),
+        grid=(Bp // bB, Dp // bD),
+        in_specs=[
+            pl.BlockSpec((bB, L, bD), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((K, bD), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bB, L, bD), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, L, Dp), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:B, :, :D]

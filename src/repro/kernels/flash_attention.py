@@ -1,0 +1,119 @@
+"""Blocked (flash-style) attention Pallas kernel with LP-informed tile sizes.
+
+Attention's two GEMMs (QK^T and PV) are 7NL degenerates; the paper's capacity
+argument picks the (block_q, block_k) pair: three f32 VMEM residents
+(q tile, o tile, running stats) plus streamed k/v tiles must fit M/2.
+block_q = block_k = 512 keeps the working set
+  (2*bq*dh*4 + 2*bk*dh*2 + bq*bk*4) < 2 MiB  for dh <= 256,
+far under VMEM while saturating the MXU (both >= 128).
+
+Causal masking is done per-tile with absolute positions; GQA is handled by
+the wrapper (kv heads are gathered, never materialized repeated in HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.conv_model import round_up
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k: int, q_offset: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)  # (bk, dh)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if kv_len % block_k != 0:  # padded keys: mask them out unconditionally
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + q_offset
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _store():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (BH, Lq, Dh)  - batch*heads flattened by the wrapper
+    k: jax.Array,  # (BH, Lk, Dh)
+    v: jax.Array,  # (BH, Lk, Dh)
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    BH, Lq, Dh = q.shape
+    Lk = k.shape[1]
+    scale = 1.0 / (Dh ** 0.5)
+    bq = min(block_q, round_up(Lq, 8))
+    bk = min(block_k, round_up(Lk, 8))
+    Lqp, Lkp = round_up(Lq, bq), round_up(Lk, bk)
+    if Lqp != Lq:
+        q = jnp.pad(q, ((0, 0), (0, Lqp - Lq), (0, 0)))
+    if Lkp != Lk:
+        # padded keys are masked out via kpos > qpos + Lk guard below
+        k = jnp.pad(k, ((0, 0), (0, Lkp - Lk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Lkp - Lk), (0, 0)))
+    n_q, n_k = Lqp // bq, Lkp // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        block_q=bq, block_k=bk, n_k=n_k, q_offset=q_offset, kv_len=Lk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Lqp, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Lq]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels are
+validated against, shape-for-shape, in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """C = A @ B with f32 accumulation regardless of input dtype."""
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32)
+    ).astype(out_dtype)
+
+
+def conv2d_ref(
+    x: jax.Array,  # (N, c_I, H, W)
+    w: jax.Array,  # (c_O, c_I, h_F, w_F)
+    stride: tuple[int, int] = (1, 1),
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Direct 7NL convolution, VALID padding (the paper's §2.1 convention:
+    H = sh*h_O + h_F  =>  h_O = (H - h_F) // sh  output rows)."""
+    sh, sw = stride
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(sh, sw),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out.astype(out_dtype)
+
+
+def conv1d_causal_ref(
+    x: jax.Array,  # (B, L, D)
+    w: jax.Array,  # (K, D) depthwise taps
+    out_dtype=None,
+) -> jax.Array:
+    """Causal depthwise conv: out[b,l,d] = sum_k x[b, l-K+1+k, d] * w[k, d],
+    zero-padded on the left (the mamba/xlstm short conv)."""
+    K = w.shape[0]
+    xf = x.astype(jnp.float32)
+    pad = jnp.pad(xf, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xf)
+    for k in range(K):
+        out = out + pad[:, k : k + x.shape[1], :] * w[k].astype(jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, Lq, Dh)
+    k: jax.Array,  # (B, Hkv, Lk, Dh)
+    v: jax.Array,  # (B, Hkv, Lk, Dh)
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jax.Array:
+    """GQA attention oracle with f32 softmax. Hkv may divide H (grouped KV).
+    ``q_offset`` shifts the causal mask (decode: query position = offset)."""
+    B, H, Lq, Dh = q.shape
+    Hkv = k.shape[1]
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        Lk = k.shape[2]
+        qpos = jnp.arange(Lq)[:, None] + q_offset
+        kpos = jnp.arange(Lk)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers."""
+from .mesh import make_host_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never touches
+jax device state (device count is locked on first jax init, and only
+dryrun.py sets the 512-fake-device XLA flag).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16).
+    Multi-pod: 2 pods x 256 chips as (pod=2, data=16, model=16); the pod axis
+    is the DCN/outer-DP axis (hierarchical gradient reduction)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

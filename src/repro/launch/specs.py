@@ -1,0 +1,92 @@
+"""ShapeDtypeStruct stand-ins for every dry-run cell: weak-type-correct,
+shardable, zero allocation.
+
+input_specs(arch, shape_name) returns the full kwargs pytree for the step
+function being lowered:
+    train   -> params(f32), opt_state, batch{tokens|embeds+labels}
+    prefill -> params(bf16), cache, tokens/embeds
+    decode  -> params(bf16), cache, token(B,1), index
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.config import LM_SHAPES, ModelConfig, ShapeSpec
+from repro.train.optimizer import AdamWState, init_state
+
+PyTree = Any
+
+
+def abstract(tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def param_structs(arch: str, dtype: str = "float32", cfg=None) -> PyTree:
+    import dataclasses
+    cfg = cfg or get_config(arch)
+    if dtype != cfg.param_dtype:
+        cfg = dataclasses.replace(cfg, param_dtype=dtype)
+    return jax.eval_shape(
+        lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def opt_structs(arch: str, cfg=None) -> PyTree:
+    p = param_structs(arch, "float32", cfg)
+    f32 = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      m=f32, v=jax.tree.map(lambda s: s, f32))
+
+
+def cache_structs(arch: str, batch: int, max_len: int, cfg=None) -> PyTree:
+    cfg = cfg or get_config(arch)
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len))
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, L = shape.global_batch, shape.seq_len
+    if cfg.inputs_are_embeddings and shape.kind != "decode":
+        out = {"embeds": jax.ShapeDtypeStruct((B, L, cfg.d_model), jnp.bfloat16)}
+        if not cfg.causal:
+            out["labels"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+        return out
+    return {"tokens": jax.ShapeDtypeStruct((B, L), jnp.int32)}
+
+
+def input_specs(arch: str, shape_name: str, cfg=None) -> Dict[str, Any]:
+    """The abstract inputs for the step lowered in this cell."""
+    cfg = cfg or get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    if shape.kind == "train":
+        return {
+            "params": param_structs(arch, "float32", cfg),
+            "opt_state": opt_structs(arch, cfg),
+            "batch": batch_structs(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_structs(arch, "bfloat16", cfg),
+            "cache": cache_structs(arch, shape.global_batch, shape.seq_len, cfg),
+            "batch": batch_structs(cfg, shape),
+        }
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "params": param_structs(arch, "bfloat16", cfg),
+        "cache": cache_structs(arch, shape.global_batch, shape.seq_len, cfg),
+        "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def n_groups_for(shape: ShapeSpec, n_devices: int) -> int:
+    return math.gcd(shape.tokens, n_devices)

@@ -1,0 +1,6 @@
+"""Model substrate: config-driven assembly of all 10 assigned architectures
+(dense GQA / MoE / SSD-mamba / xLSTM / encoder / VLM-stub) with stacked-layer
+scan, KV-cache decode, and LP-driven sharding rules."""
+
+from . import moe, sharding, ssm, transformer, xlstm  # noqa: F401
+from .config import LM_SHAPES, ModelConfig, ShapeSpec, reduced  # noqa: F401

@@ -1,0 +1,201 @@
+"""Shared neural layers: norms, RoPE, SwiGLU, GQA attention with KV cache.
+
+Pure functions over explicit parameter pytrees (no framework). Weights are
+kept in cfg.param_dtype and cast to cfg.compute_dtype at use; attention
+logits/softmax and all reductions accumulate in f32 (the paper's
+mixed-precision discipline: low-precision operands, high-precision
+accumulator).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+Params = Dict[str, jax.Array]
+
+
+def truncated_normal(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, L, hd); positions: (L,) or (B, L)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * inv[None, :]  # (L, hd/2)
+        ang = ang[None, None]  # (1, 1, L, hd/2)
+    else:
+        ang = positions[:, :, None].astype(jnp.float32) * inv[None, None, :]
+        ang = ang[:, None]  # (B, 1, L, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d_model ** -0.5
+    return {
+        "w_gate": truncated_normal(k1, (d_model, d_ff), std, dtype),
+        "w_up": truncated_normal(k2, (d_model, d_ff), std, dtype),
+        "w_down": truncated_normal(k3, (d_ff, d_model), d_ff ** -0.5, dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array, compute_dtype) -> jax.Array:
+    xc = x.astype(compute_dtype)
+    g = jnp.einsum("...d,df->...f", xc, p["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("...d,df->...f", xc, p["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(compute_dtype)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg) -> Params:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    std = D ** -0.5
+    p = {
+        "wq": truncated_normal(ks[0], (D, H * hd), std, dtype),
+        "wk": truncated_normal(ks[1], (D, KV * hd), std, dtype),
+        "wv": truncated_normal(ks[2], (D, KV * hd), std, dtype),
+        "wo": truncated_normal(ks[3], (H * hd, D), (H * hd) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def attention_block(
+    p: Params,
+    x: jax.Array,  # (B, L, D)
+    cfg,
+    positions: jax.Array,  # (L,) absolute positions of x
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,KV,Lmax,hd) k, v
+    cache_index: Optional[jax.Array] = None,  # scalar: write offset
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Returns (out, updated_cache). With a cache, keys/values are written at
+    cache_index and attention runs over the full cache (decode/prefill)."""
+    B, L, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+
+    q = jnp.einsum("bld,dh->blh", xc, p["wq"].astype(cd))
+    k = jnp.einsum("bld,dh->blh", xc, p["wk"].astype(cd))
+    v = jnp.einsum("bld,dh->blh", xc, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(B, L, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and len(cache) == 1:
+        # fused layout: one (B, KV, L, 2, hd) tensor -> a single
+        # dynamic-update-slice per step instead of two (§Perf decode variant)
+        ckv = cache[0]
+        kv = jnp.stack([k, v], axis=3).astype(ckv.dtype)  # (B,KV,L,2,hd)
+        ckv = jax.lax.dynamic_update_slice(ckv, kv, (0, 0, cache_index, 0, 0))
+        new_cache = (ckv,)
+        k_att = ckv[:, :, :, 0, :].astype(cd)
+        v_att = ckv[:, :, :, 1, :].astype(cd)
+        q_offset = cache_index
+    elif cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, cache_index, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, cache_index, 0))
+        new_cache = (ck, cv)
+        k_att, v_att = ck.astype(cd), cv.astype(cd)
+        q_offset = cache_index
+    else:
+        k_att, v_att = k, v
+        q_offset = 0
+
+    if use_pallas:
+        o = ops.attention(q, k_att, v_att, causal=cfg.causal,
+                          q_offset=int(q_offset) if cache is None else 0,
+                          use_pallas=True)
+    else:
+        o = _xla_attention(q, k_att, v_att, causal=cfg.causal, q_offset=q_offset)
+    o = o.transpose(0, 2, 1, 3).reshape(B, L, H * hd)
+    out = jnp.einsum("blh,hd->bld", o, p["wo"].astype(cd)).astype(x.dtype)
+    return out, new_cache
+
+
+def _xla_attention(q, k, v, causal: bool, q_offset) -> jax.Array:
+    """jnp attention with GQA grouping kept factored (no KV repeat in HBM)."""
+    B, H, Lq, hd = q.shape
+    KV, Lk = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, KV, g, Lq, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bkgqd,bkld->bkgql", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(Lq) + q_offset
+        kpos = jnp.arange(Lk)
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgql,bkld->bkgqd", probs, v.astype(jnp.float32))
+    return o.reshape(B, H, Lq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return truncated_normal(key, (vocab, d_model), 1.0, dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def lm_logits(head: jax.Array, x: jax.Array, compute_dtype) -> jax.Array:
+    """(B, L, D) @ (D, V) -> f32 logits."""
+    return jnp.einsum("bld,dv->blv", x.astype(compute_dtype),
+                      head.astype(compute_dtype)).astype(jnp.float32)

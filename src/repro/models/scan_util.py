@@ -1,0 +1,24 @@
+"""Scan wrapper: rolled (compact HLO) by default, fully unrolled when
+REPRO_UNROLL_SCANS=1.
+
+Why: XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so a scan-over-layers model would report 1/R of its true FLOPs/bytes
+in the dry-run roofline. The dry-run sets the env var so every scan unrolls
+and cost_analysis sees the full program; tests and real training keep the
+rolled form (compile time, remat behavior identical either way).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def unroll_scans() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if unroll_scans() else 1)

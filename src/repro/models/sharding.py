@@ -1,0 +1,168 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+The axis binding follows the paper's parallel blocking LP
+(core.sharding_opt.plan_gemm_sharding ranks it): for every GEMM in the stack,
+rows (tokens) -> the data-like axes, columns (features/heads/experts/vocab)
+-> the `model` axis; the reduction axis is never sharded in the fwd pass (its
+split is what the LP charges as output-reduction traffic).
+
+Conventions:
+  mesh axes  = ("pod", "data", "model")  (pod optional)
+  batch spec = P(("pod", "data")) - the pod axis is an outer pure-DP ring
+  params     = stacked over repeats: a leading None is prepended to every spec
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+PyTree = Any
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def batch_axes(mesh: Mesh):
+    ax = data_axes(mesh)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+def _attn_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "wq": P(None, "model"),
+        "wk": P(None, "model"),
+        "wv": P(None, "model"),
+        "wo": P("model", None),
+    }
+    if cfg.qkv_bias:
+        s.update({"bq": P("model"), "bk": P("model"), "bv": P("model")})
+    return s
+
+
+def _mlp_specs() -> dict:
+    return {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+            "w_down": P("model", None)}
+
+
+def _moe_specs() -> dict:
+    # expert parallelism: experts sharded over `model`
+    return {"router": P(None, None),
+            "w_gate": P("model", None, None),
+            "w_up": P("model", None, None),
+            "w_down": P("model", None, None)}
+
+
+def _mamba_specs() -> dict:
+    return {
+        "w_in": P(None, "model"),
+        "conv_w": P(None, "model"),
+        "w_dt": P("model", None),
+        "b_dt": P(None),
+        "w_B": P("model", None),
+        "w_C": P("model", None),
+        "log_A": P(None),
+        "D_skip": P(None),
+        "w_out": P("model", None),
+    }
+
+
+def _mlstm_specs() -> dict:
+    return {"wq": P(None, "model"), "wk": P(None, "model"),
+            "wv": P(None, "model"), "w_if": P(None, None),
+            "b_if": P(None), "wo": P("model", None)}
+
+
+def _slstm_specs() -> dict:
+    return {"w_zifo": P(None, "model"), "b_zifo": P("model"),
+            "wo": P("model", None)}
+
+
+def param_specs(cfg: ModelConfig) -> PyTree:
+    """PartitionSpec pytree matching transformer.init_params structure."""
+    layers = {}
+    for i, kind in enumerate(cfg.pattern):
+        blk = {"norm1": P(None)}
+        if kind == "attn":
+            blk["core"] = _attn_specs(cfg)
+        elif kind == "mamba":
+            blk["core"] = _mamba_specs()
+        elif kind == "mlstm":
+            blk["core"] = _mlstm_specs()
+        elif kind == "slstm":
+            blk["core"] = _slstm_specs()
+        from .transformer import _has_ffn, _is_moe
+        if _has_ffn(cfg, i):
+            blk["norm2"] = P(None)
+            blk["ffn"] = _moe_specs() if _is_moe(cfg, i) else _mlp_specs()
+        layers[f"b{i}"] = blk
+    # prepend the stacked-repeats axis
+    layers = jax.tree.map(lambda p: P(None, *p), layers,
+                          is_leaf=lambda x: isinstance(x, P))
+    specs = {"layers": layers,
+             "final_norm": P(None),
+             "head": P(None, "model")}
+    if not cfg.inputs_are_embeddings or cfg.family == "vlm":
+        specs["embed"] = P("model", None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq_len: int) -> PyTree:
+    """Decode cache specs. Attention KV: batch on data axes when it divides,
+    sequence on `model` (32k decode) or on every axis (500k, batch 1) — GSPMD
+    turns softmax/PV over the sharded length into the flash-decode
+    all-reduce pattern."""
+    ba = batch_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+    shard_batch = ba if batch % max(dsize, 1) == 0 and batch > 1 else None
+    if shard_batch is None:
+        seq_spec = tuple(mesh.axis_names)  # all axes on sequence (500k cell)
+    else:
+        seq_spec = "model"
+
+    def unit():
+        c = {}
+        for i, kind in enumerate(cfg.pattern):
+            if kind == "attn":
+                if cfg.fused_kv_cache:
+                    c[f"b{i}"] = {"kv": P(None, shard_batch, None, seq_spec,
+                                          None, None)}
+                else:
+                    kv = P(None, shard_batch, None, seq_spec, None)
+                    c[f"b{i}"] = {"k": kv, "v": kv}
+            elif kind == "mamba":
+                c[f"b{i}"] = {"h": P(None, shard_batch, "model", None, None),
+                              "tail": P(None, shard_batch, None, "model")}
+            elif kind == "mlstm":
+                c[f"b{i}"] = {"C": P(None, shard_batch, None, "model", None),
+                              "n": P(None, shard_batch, None, "model")}
+            elif kind == "slstm":
+                c[f"b{i}"] = {"c": P(None, shard_batch, "model"),
+                              "n": P(None, shard_batch, "model")}
+        return c
+
+    return unit()
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, kind: str) -> PyTree:
+    """Input-batch specs for train/prefill/decode steps."""
+    ba = batch_axes(mesh)
+    specs = {}
+    if cfg.inputs_are_embeddings and kind != "decode":
+        specs["embeds"] = P(ba, "model", None)  # sequence-sharded activations
+        specs["labels"] = P(ba, "model")
+    else:
+        specs["tokens"] = P(ba, None)
+    return specs
+
+
+def shardings(mesh: Mesh, specs: PyTree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,221 @@
+"""Mamba block in chunkwise state-space-dual (SSD) form.
+
+HARDWARE ADAPTATION (DESIGN.md §2): the original Mamba CUDA kernel fuses a
+sequential selective scan; a mechanical port would serialize the TPU. We use
+the matmul-rich SSD formulation (Mamba-2 style): the sequence is split into
+chunks of ``cfg.chunk_size``; within a chunk the recurrence is evaluated as
+two MXU-friendly einsums (an attention-like (c x c) masked product), across
+chunks a lax.scan carries the (H, p, S) state. Per-head scalar decay
+a_t = exp(-dt_t * A_h), B/C projections shared across heads.
+
+Recurrence (per batch, head):
+    h_t = a_t h_{t-1} + (dt_t x_t) outer B_t        h in R^{p x S}
+    y_t = h_t C_t + D_h x_t
+
+The short causal conv1d in front is the paper's 7NL conv degenerate and can
+run through the Pallas conv1d kernel (kernels/conv1d.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .layers import truncated_normal
+from .scan_util import scan as _scan
+
+Params = Dict[str, jax.Array]
+
+
+def init_mamba(key, cfg) -> Params:
+    D, di, S, K = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim, cfg.conv_kernel
+    H = di // cfg.hd if di % cfg.hd == 0 else 1
+    p = di // H
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    std = D ** -0.5
+    return {
+        "w_in": truncated_normal(ks[0], (D, 2 * di), std, dtype),  # x, z
+        "conv_w": truncated_normal(ks[1], (K, di), K ** -0.5, dtype),
+        "w_dt": truncated_normal(ks[2], (di, H), di ** -0.5, dtype),
+        "b_dt": jnp.zeros((H,), dtype),
+        "w_B": truncated_normal(ks[3], (di, S), di ** -0.5, dtype),
+        "w_C": truncated_normal(ks[4], (di, S), di ** -0.5, dtype),
+        "log_A": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),  # (H,)
+        "D_skip": jnp.ones((H,), dtype),
+        "w_out": truncated_normal(ks[5], (di, D), di ** -0.5, dtype),
+    }
+
+
+def _heads(cfg) -> Tuple[int, int]:
+    di = cfg.d_inner
+    H = di // cfg.hd if di % cfg.hd == 0 else 1
+    return H, di // H
+
+
+def _ssm_inputs(p: Params, x: jax.Array, cfg, use_pallas: bool):
+    """Shared front: in-proj, causal conv, gate projections.
+
+    Returns xh (B,L,H,ph), z (B,L,di), loga (B,L,H), dt (B,L,H),
+    Bm/Cm (B,L,S)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    H, ph = _heads(cfg)
+    xz = jnp.einsum("bld,de->ble", x.astype(cd), p["w_in"].astype(cd))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = ops.conv1d_causal(xi, p["conv_w"].astype(cd), use_pallas=use_pallas)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(cd)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", xi, p["w_dt"].astype(cd)).astype(jnp.float32)
+        + p["b_dt"].astype(jnp.float32))  # (B,L,H) f32
+    A = jnp.exp(p["log_A"].astype(jnp.float32))  # (H,)
+    loga = -dt * A[None, None, :]  # log a_t  (<= 0)
+    Bm = jnp.einsum("bld,ds->bls", xi, p["w_B"].astype(cd)).astype(jnp.float32)
+    Cm = jnp.einsum("bld,ds->bls", xi, p["w_C"].astype(cd)).astype(jnp.float32)
+    B, L, _ = x.shape
+    xh = xi.reshape(B, L, H, ph).astype(jnp.float32) * dt[..., None]
+    return xh, xi, z, loga, dt, Bm, Cm
+
+
+def mamba_block(
+    p: Params,
+    x: jax.Array,  # (B, L, D)
+    cfg,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,  # (ssm h, conv tail)
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Full-sequence (train/prefill) mamba block; chunked SSD scan."""
+    B, L, D = x.shape
+    H, ph = _heads(cfg)
+    S = cfg.ssm_state_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    xh, xi, z, loga, dt, Bm, Cm = _ssm_inputs(p, x, cfg, use_pallas)
+
+    c = min(cfg.chunk_size, L)
+    if L % c != 0:  # pad to a whole number of chunks
+        pad = c - L % c
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // c
+
+    def chunk(h_prev, inp):
+        xb, la, Bc, Cc = inp  # (B,c,H,ph), (B,c,H), (B,c,S), (B,c,S)
+        Lc = jnp.cumsum(la, axis=1)  # inclusive cumulative log-decay
+        scores = jnp.einsum("bts,bus->btu", Cc, Bc)  # (B,c,c)
+        # valid (t >= u) exponents are <= 0; clamp kills upper-triangle
+        # overflow that would otherwise produce inf * 0 = NaN under the mask
+        decay = jnp.exp(jnp.minimum(
+            Lc[:, :, None, :] - Lc[:, None, :, :], 0.0))  # (B,t,u,H)
+        # symbolic causal mask (iota compare): a materialized tril constant
+        # at c=4096 is 67MB and stalls XLA constant folding per unrolled body
+        ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+        ui = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+        tri = (ui <= ti).astype(jnp.float32)
+        y_intra = jnp.einsum("btu,btuh,buhp->bthp",
+                             scores * tri[None], decay * tri[None, :, :, None], xb)
+        y_inter = jnp.einsum("bts,bhps,bth->bthp", Cc, h_prev, jnp.exp(Lc))
+        Lend = Lc[:, -1:, :]  # (B,1,H)
+        w_end = jnp.exp(Lend - Lc)  # decay from u to chunk end
+        h_new = (jnp.exp(Lend[:, 0, :])[:, :, None, None] * h_prev
+                 + jnp.einsum("buh,buhp,bus->bhps", w_end, xb, Bc))
+        return h_new, y_intra + y_inter
+
+    def to_chunks(a):
+        return a.reshape(a.shape[0], nc, c, *a.shape[2:]).swapaxes(0, 1)
+
+    h0 = (state[0].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, H, ph, S), jnp.float32))
+    h_last, ys = _scan(
+        chunk, h0, (to_chunks(xh), to_chunks(loga), to_chunks(Bm), to_chunks(Cm)))
+    y = ys.swapaxes(0, 1).reshape(B, nc * c, H, ph)[:, :L]
+    y = y + xi.reshape(B, L, H, ph).astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, L, H * ph)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cd)
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"].astype(cd)).astype(x.dtype)
+
+    new_state = None
+    if state is not None:
+        K = cfg.conv_kernel
+        xz = jnp.einsum("bld,de->ble", x.astype(cd), p["w_in"].astype(cd))
+        conv_tail = jnp.split(xz, 2, axis=-1)[0][:, -(K - 1):, :]
+        new_state = (h_last.astype(state[0].dtype), conv_tail.astype(state[1].dtype))
+    return out, new_state
+
+
+def mamba_decode_step(
+    p: Params,
+    x: jax.Array,  # (B, 1, D)
+    cfg,
+    state: Tuple[jax.Array, jax.Array],  # h (B,H,ph,S), conv tail (B,K-1,di)
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    B = x.shape[0]
+    H, ph = _heads(cfg)
+    cd = jnp.dtype(cfg.compute_dtype)
+    h, tail = state
+    K = cfg.conv_kernel
+
+    xz = jnp.einsum("bld,de->ble", x.astype(cd), p["w_in"].astype(cd))
+    xi_new, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    window = jnp.concatenate([tail.astype(cd), xi_new], axis=1)  # (B,K,di)
+    xi = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))[:, None, :]
+    xi = jax.nn.silu(xi).astype(cd)
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", xi, p["w_dt"].astype(cd)).astype(jnp.float32)
+        + p["b_dt"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = jnp.exp(p["log_A"].astype(jnp.float32))
+    a = jnp.exp(-dt * A[None, :])  # (B,H)
+    Bm = jnp.einsum("bld,ds->bls", xi, p["w_B"].astype(cd)).astype(jnp.float32)[:, 0]
+    Cm = jnp.einsum("bld,ds->bls", xi, p["w_C"].astype(cd)).astype(jnp.float32)[:, 0]
+    xhead = xi.reshape(B, H, ph).astype(jnp.float32) * dt[..., None]
+
+    hf = h.astype(jnp.float32)
+    h_new = a[:, :, None, None] * hf + jnp.einsum("bhp,bs->bhps", xhead, Bm)
+    y = jnp.einsum("bhps,bs->bhp", h_new, Cm)
+    y = y + xi.reshape(B, H, ph).astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, H * ph)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cd)
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"].astype(cd)).astype(x.dtype)
+    new_tail = jnp.concatenate([tail[:, 1:], jnp.split(xz, 2, axis=-1)[0]], axis=1) \
+        if K > 1 else tail
+    return out, (h_new.astype(h.dtype), new_tail.astype(tail.dtype))
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32):
+    H, ph = _heads(cfg)
+    h = jnp.zeros((batch, H, ph, cfg.ssm_state_dim), dtype)
+    tail = jnp.zeros((batch, max(cfg.conv_kernel - 1, 1), cfg.d_inner), dtype)
+    return (h, tail)
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (tests): the literal recurrence.
+# ---------------------------------------------------------------------------
+
+def mamba_block_ref(p: Params, x: jax.Array, cfg) -> jax.Array:
+    B, L, D = x.shape
+    H, ph = _heads(cfg)
+    S = cfg.ssm_state_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    xh, xi, z, loga, dt, Bm, Cm = _ssm_inputs(p, x, cfg, use_pallas=False)
+
+    def step(h, inp):
+        xt, lat, Bt, Ct = inp  # (B,H,ph), (B,H), (B,S), (B,S)
+        h = jnp.exp(lat)[:, :, None, None] * h + jnp.einsum("bhp,bs->bhps", xt, Bt)
+        y = jnp.einsum("bhps,bs->bhp", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((B, H, ph, S), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (xh.swapaxes(0, 1), loga.swapaxes(0, 1),
+                                    Bm.swapaxes(0, 1), Cm.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1)  # (B,L,H,ph)
+    y = y + xi.reshape(B, L, H, ph).astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, L, H * ph)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cd)
+    return jnp.einsum("ble,ed->bld", y, p["w_out"].astype(cd)).astype(x.dtype)

@@ -1,0 +1,341 @@
+"""Config-driven model assembly for all 10 assigned architectures.
+
+Parameters for one *pattern unit* (e.g. 7 mamba blocks + 1 attention block for
+jamba) are initialized per repeat and stacked on a leading axis; the forward
+pass lax.scans over repeats so the lowered HLO contains a single unit
+regardless of depth. KV caches / recurrent states are stacked the same way
+and scanned alongside.
+
+Block kinds: attn | mamba | mlstm | slstm. FFN (SwiGLU or MoE per
+cfg.n_experts/moe_every) follows attn/mamba/slstm positions when d_ff > 0.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .scan_util import scan as _scan
+
+from . import moe as moe_lib
+from . import ssm, xlstm
+from .config import ModelConfig
+from .layers import (attention_block, embed, init_attention, init_embed,
+                     init_mlp, lm_logits, mlp, rms_norm, truncated_normal)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _has_ffn(cfg: ModelConfig, pos: int) -> bool:
+    kind = cfg.pattern[pos]
+    return cfg.d_ff > 0 and kind in ("attn", "mamba", "slstm")
+
+
+def _is_moe(cfg: ModelConfig, pos: int) -> bool:
+    return _has_ffn(cfg, pos) and cfg.n_experts > 0 and pos % cfg.moe_every == 0
+
+
+def init_unit(key, cfg: ModelConfig) -> Dict[str, PyTree]:
+    """Parameters for one pattern unit."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    unit: Dict[str, PyTree] = {}
+    keys = jax.random.split(key, 2 * len(cfg.pattern))
+    for i, kind in enumerate(cfg.pattern):
+        k_core, k_ffn = keys[2 * i], keys[2 * i + 1]
+        blk: Dict[str, PyTree] = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+        if kind == "attn":
+            blk["core"] = init_attention(k_core, cfg)
+        elif kind == "mamba":
+            blk["core"] = ssm.init_mamba(k_core, cfg)
+        elif kind == "mlstm":
+            blk["core"] = xlstm.init_mlstm(k_core, cfg)
+        elif kind == "slstm":
+            blk["core"] = xlstm.init_slstm(k_core, cfg)
+        else:
+            raise ValueError(f"unknown block kind {kind!r}")
+        if _has_ffn(cfg, i):
+            blk["norm2"] = jnp.ones((cfg.d_model,), dtype)
+            blk["ffn"] = (moe_lib.init_moe(k_ffn, cfg) if _is_moe(cfg, i)
+                          else init_mlp(k_ffn, cfg.d_model, cfg.d_ff, dtype))
+        unit[f"b{i}"] = blk
+    return unit
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_head, k_units = jax.random.split(key, 3)
+    params: Dict[str, PyTree] = {}
+    if not cfg.inputs_are_embeddings or cfg.family == "vlm":
+        params["embed"] = init_embed(k_embed, cfg.padded_vocab, cfg.d_model, dtype)
+    params["layers"] = jax.vmap(lambda k: init_unit(k, cfg))(
+        jax.random.split(k_units, cfg.repeats))
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    params["head"] = truncated_normal(k_head, (cfg.d_model, cfg.padded_vocab),
+                                      cfg.d_model ** -0.5, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches / recurrent state
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    """Stacked (repeats-leading) cache pytree for decode."""
+    def unit_cache():
+        c: Dict[str, PyTree] = {}
+        for i, kind in enumerate(cfg.pattern):
+            if kind == "attn":
+                if cfg.fused_kv_cache:
+                    shape = (batch, cfg.n_kv_heads, max_len, 2, cfg.hd)
+                    c[f"b{i}"] = {"kv": jnp.zeros(shape, dtype)}
+                else:
+                    shape = (batch, cfg.n_kv_heads, max_len, cfg.hd)
+                    c[f"b{i}"] = {"k": jnp.zeros(shape, dtype),
+                                  "v": jnp.zeros(shape, dtype)}
+            elif kind == "mamba":
+                h, tail = ssm.init_mamba_state(cfg, batch, jnp.float32)
+                c[f"b{i}"] = {"h": h, "tail": tail}
+            elif kind == "mlstm":
+                C, n = xlstm.init_mlstm_state(cfg, batch, jnp.float32)
+                c[f"b{i}"] = {"C": C, "n": n}
+            elif kind == "slstm":
+                cc, nn = xlstm.init_slstm_state(cfg, batch, jnp.float32)
+                c[f"b{i}"] = {"c": cc, "n": nn}
+        return c
+
+    one = unit_cache()
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.repeats,) + a.shape), one)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
+                  cache_index, n_groups: int, use_pallas: bool, decode: bool):
+    """One pattern unit; returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, PyTree] = {}
+    for i, kind in enumerate(cfg.pattern):
+        blk = unit_params[f"b{i}"]
+        h = rms_norm(x, blk["norm1"], cfg.norm_eps)
+        bc = unit_cache.get(f"b{i}") if unit_cache is not None else None
+        if kind == "attn":
+            if bc is None:
+                cache = None
+            elif cfg.fused_kv_cache:
+                cache = (bc["kv"],)
+            else:
+                cache = (bc["k"], bc["v"])
+            out, upd = attention_block(blk["core"], h, cfg, positions,
+                                       cache=cache, cache_index=cache_index,
+                                       use_pallas=use_pallas)
+            if upd is not None:
+                new_cache[f"b{i}"] = ({"kv": upd[0]} if cfg.fused_kv_cache
+                                      else {"k": upd[0], "v": upd[1]})
+        elif kind == "mamba":
+            state = (bc["h"], bc["tail"]) if bc is not None else None
+            if decode:
+                out, upd = ssm.mamba_decode_step(blk["core"], h, cfg, state,
+                                                 use_pallas=use_pallas)
+            else:
+                out, upd = ssm.mamba_block(blk["core"], h, cfg, state,
+                                           use_pallas=use_pallas)
+            if upd is not None:
+                new_cache[f"b{i}"] = {"h": upd[0], "tail": upd[1]}
+        elif kind == "mlstm":
+            state = (bc["C"], bc["n"]) if bc is not None else None
+            if decode:
+                out, upd = xlstm.mlstm_decode_step(blk["core"], h, cfg, state)
+            else:
+                out, upd = xlstm.mlstm_block(blk["core"], h, cfg, state)
+            if upd is not None:
+                new_cache[f"b{i}"] = {"C": upd[0], "n": upd[1]}
+        elif kind == "slstm":
+            state = (bc["c"], bc["n"]) if bc is not None else None
+            if decode:
+                out, upd = xlstm.slstm_decode_step(blk["core"], h, cfg, state)
+            else:
+                out, upd = xlstm.slstm_block(blk["core"], h, cfg, state)
+            if upd is not None:
+                new_cache[f"b{i}"] = {"c": upd[0], "n": upd[1]}
+        x = x + out
+        if _has_ffn(cfg, i):
+            h = rms_norm(x, blk["norm2"], cfg.norm_eps)
+            if _is_moe(cfg, i):
+                f, a = moe_lib.moe_block(blk["ffn"], h, cfg, n_groups=n_groups)
+                aux = aux + a
+            else:
+                f = mlp(blk["ffn"], h, jnp.dtype(cfg.compute_dtype))
+            x = x + f
+    return x, new_cache, aux
+
+
+def hidden_forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,  # (B, L) int32
+    embeds: Optional[jax.Array] = None,  # (B, L, D) stub-frontend outputs
+    cache: Optional[PyTree] = None,
+    cache_index: Optional[jax.Array] = None,
+    n_groups: int = 1,
+    use_pallas: bool = False,
+    remat: bool = False,
+    decode: bool = False,
+    act_spec=None,  # PartitionSpec for (B, L, D) activations (seq parallel)
+) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+    """Backbone only: returns (final-norm hidden states, new_cache, aux)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    if embeds is not None:
+        x = embeds.astype(cd)
+    else:
+        x = embed(params["embed"], tokens, cd)
+    B, L, _ = x.shape
+    if cache_index is None:
+        cache_index = jnp.zeros((), jnp.int32)
+    positions = jnp.arange(L, dtype=jnp.int32) + cache_index
+
+    def constrain(a):
+        if act_spec is not None:
+            return jax.lax.with_sharding_constraint(a, act_spec)
+        return a
+
+    x = constrain(x)
+    body_fn = functools.partial(
+        _unit_forward, cfg=cfg, positions=positions, cache_index=cache_index,
+        n_groups=n_groups, use_pallas=use_pallas, decode=decode)
+
+    def scan_body(carry, xs):
+        x, aux = carry
+        unit_params, unit_cache = xs
+        x, new_cache, a = body_fn(unit_params, x, unit_cache=unit_cache)
+        return (constrain(x), aux + a), new_cache
+
+    scan_fn = scan_body
+    if remat:
+        scan_fn = jax.checkpoint(
+            scan_body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    (x, aux), new_cache = _scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], cache) if cache is not None else (params["layers"],
+                                                             _none_tree(cfg)))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, (new_cache if cache is not None else None), aux
+
+
+def forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    cache: Optional[PyTree] = None,
+    cache_index: Optional[jax.Array] = None,
+    n_groups: int = 1,
+    use_pallas: bool = False,
+    remat: bool = False,
+    decode: bool = False,
+    act_spec=None,
+) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+    """Returns (logits, new_cache, aux_loss)."""
+    x, new_cache, aux = hidden_forward(
+        params, cfg, tokens=tokens, embeds=embeds, cache=cache,
+        cache_index=cache_index, n_groups=n_groups, use_pallas=use_pallas,
+        remat=remat, decode=decode, act_spec=act_spec)
+    logits = lm_logits(params["head"], x, jnp.dtype(cfg.compute_dtype))
+    return logits, new_cache, aux
+
+
+def _none_tree(cfg: ModelConfig):
+    """Scan requires xs leaves; give each repeat an empty-dict placeholder."""
+    return {"__empty__": jnp.zeros((cfg.repeats,), jnp.int8)}
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps (pjit'd by launch/ and train/)
+# ---------------------------------------------------------------------------
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Causal LM shift-by-one cross entropy, mean over (B, L-1)."""
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    true_logit = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - true_logit)
+
+
+def classification_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-frame classification (encoder models)."""
+    lg = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    true_logit = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - true_logit)
+
+
+def chunked_next_token_loss(params, cfg: ModelConfig, x: jax.Array,
+                            tokens: jax.Array, n_chunks: int) -> jax.Array:
+    """Cross entropy without materializing the full (B, L, V) logits: the
+    sequence is split into n_chunks, each chunk's logits are computed,
+    reduced, and rematerialized in the backward pass. Essential when
+    V ~ 150k (2.5 GB/device of f32 logits otherwise)."""
+    B, L, D = x.shape
+    xs = x[:, :-1]
+    tg = tokens[:, 1:]
+    Lm = xs.shape[1]
+    pad = (-Lm) % n_chunks
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        tg = jnp.pad(tg, ((0, 0), (0, pad)), constant_values=-1)
+    c = xs.shape[1] // n_chunks
+    xs = xs.reshape(B, n_chunks, c, D).swapaxes(0, 1)
+    tg = tg.reshape(B, n_chunks, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(xc, tc):
+        lg = lm_logits(params["head"], xc, jnp.dtype(cfg.compute_dtype))
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        tl = jnp.take_along_axis(lg, jnp.maximum(tc, 0)[..., None], axis=-1)[..., 0]
+        valid = (tc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - tl) * valid), jnp.sum(valid)
+
+    def body(carry, xs_tc):
+        s, n = carry
+        ls, ns = chunk_loss(*xs_tc)
+        return (s + ls, n + ns), None
+
+    (tot, cnt), _ = _scan(body, (0.0, 0.0), (xs, tg))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            n_groups: int = 1, use_pallas: bool = False,
+            remat: bool = False, aux_weight: float = 0.01,
+            loss_chunks: int = 0, act_spec=None):
+    if loss_chunks > 1 and cfg.causal and "tokens" in batch:
+        x, _, aux = hidden_forward(
+            params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            n_groups=n_groups, use_pallas=use_pallas, remat=remat,
+            act_spec=act_spec)
+        loss = chunked_next_token_loss(params, cfg, x, batch["tokens"],
+                                       loss_chunks)
+        return loss + aux_weight * aux, (loss, aux)
+    logits, _, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        n_groups=n_groups, use_pallas=use_pallas, remat=remat,
+        act_spec=act_spec)
+    if cfg.causal and "tokens" in batch:
+        loss = next_token_loss(logits, batch["tokens"])
+    else:
+        loss = classification_loss(logits, batch["labels"])
+    return loss + aux_weight * aux, (loss, aux)

@@ -1,0 +1,264 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+TPU adaptation notes (DESIGN.md §2/§7):
+  * mLSTM maps onto the same chunkwise-dual machinery as SSD: matrix state
+    C_t = f_t C_{t-1} + i_t v_t k_t^T is the mamba recurrence with S = head
+    dim, so the chunked evaluation is two MXU einsums per chunk. The
+    exponential input gate is stabilized by clamping its pre-activation
+    (exp-gate overflow guard) instead of xLSTM's running-max bookkeeping.
+  * sLSTM drops the hidden-to-hidden gate recurrence (input-conditioned gates
+    only) so the scalar recurrence becomes associative and runs as a
+    log-depth associative scan instead of a 524k-step sequential loop.
+Both simplifications are recorded as changed assumptions.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import truncated_normal
+from .scan_util import scan as _scan
+
+Params = Dict[str, jax.Array]
+
+_EXP_CLAMP = 8.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg) -> Params:
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    std = D ** -0.5
+    return {
+        "wq": truncated_normal(ks[0], (D, D), std, dtype),
+        "wk": truncated_normal(ks[1], (D, D), std, dtype),
+        "wv": truncated_normal(ks[2], (D, D), std, dtype),
+        "w_if": truncated_normal(ks[3], (D, 2 * H), std, dtype),  # i, f gates
+        "b_if": jnp.zeros((2 * H,), dtype),
+        "wo": truncated_normal(ks[4], (D, D), std, dtype),
+    }
+
+
+def _mlstm_gates(p: Params, x: jax.Array, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, L, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    xc = x.astype(cd)
+    q = jnp.einsum("bld,de->ble", xc, p["wq"].astype(cd)).reshape(B, L, H, hd)
+    k = jnp.einsum("bld,de->ble", xc, p["wk"].astype(cd)).reshape(B, L, H, hd)
+    v = jnp.einsum("bld,de->ble", xc, p["wv"].astype(cd)).reshape(B, L, H, hd)
+    gates = jnp.einsum("bld,dg->blg", xc, p["w_if"].astype(cd)).astype(jnp.float32)
+    gates = gates + p["b_if"].astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)  # (B,L,H)
+    logi = jnp.clip(ig, -_EXP_CLAMP, _EXP_CLAMP)  # log of exp input gate
+    logf = jax.nn.log_sigmoid(fg)  # forget in (0,1)
+    scale = hd ** -0.5
+    return (q.astype(jnp.float32) * scale, k.astype(jnp.float32),
+            v.astype(jnp.float32), logi, logf)
+
+
+def mlstm_block(
+    p: Params,
+    x: jax.Array,  # (B, L, D)
+    cfg,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,  # C (B,H,hd,hd), n (B,H,hd)
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    B, L, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    cd = jnp.dtype(cfg.compute_dtype)
+    q, k, v, logi, logf = _mlstm_gates(p, x, cfg)
+
+    c = min(cfg.chunk_size, L)
+    pad = (c - L % c) % c
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, logi, logf = map(zf, (q, k, v, logi, logf))
+    nc = q.shape[1] // c
+
+    def chunk(carry, inp):
+        C_prev, n_prev = carry  # (B,H,hd,hd), (B,H,hd)
+        qc, kc, vc, lic, lfc = inp  # (B,c,H,*)
+        Lc = jnp.cumsum(lfc, axis=1)  # cumulative log forget (inclusive)
+        # intra: weight for source u at target t: exp(Lc_t - Lc_u + logi_u).
+        # Valid (t >= u) entries are <= _EXP_CLAMP; the clamp prevents
+        # upper-triangle overflow (inf * 0 = NaN under the causal mask).
+        w = jnp.exp(jnp.minimum(
+            Lc[:, :, None, :] - Lc[:, None, :, :] + lic[:, None, :, :],
+            _EXP_CLAMP))
+        # symbolic causal mask (see ssm.py: avoids giant folded constants)
+        ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+        ui = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+        tri = (ui <= ti).astype(jnp.float32)[None, :, :, None]
+        w = w * tri  # (B,t,u,H)
+        scores = jnp.einsum("bthd,buhd->btuh", qc, kc)
+        num = jnp.einsum("btuh,btuh,buhd->bthd", scores, w, vc)
+        den = jnp.einsum("btuh,btuh,buhd->bthd", scores, w, jnp.ones_like(kc))
+        # carry-in contribution
+        dstart = jnp.exp(Lc)  # (B,c,H)
+        num = num + jnp.einsum("bthd,bhde,bth->bthe", qc, C_prev, dstart)
+        den = den + jnp.einsum("bthd,bhd,bth->bth", qc, n_prev, dstart)[..., None]
+        h = num / jnp.maximum(jnp.abs(den), 1.0)
+        # state update to chunk end
+        Lend = Lc[:, -1:, :]
+        w_end = jnp.exp(Lend - Lc + lic)  # (B,c,H)
+        C_new = (jnp.exp(Lend[:, 0])[:, :, None, None] * C_prev
+                 + jnp.einsum("buh,buhd,buhe->bhde", w_end, kc, vc))
+        n_new = (jnp.exp(Lend[:, 0])[:, :, None] * n_prev
+                 + jnp.einsum("buh,buhd->bhd", w_end, kc))
+        return (C_new, n_new), h
+
+    def to_chunks(a):
+        return a.reshape(B, nc, c, *a.shape[2:]).swapaxes(0, 1)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+    else:
+        C0, n0 = (s.astype(jnp.float32) for s in state)
+    (C_last, n_last), hs = _scan(
+        chunk, (C0, n0), tuple(map(to_chunks, (q, k, v, logi, logf))))
+    h = hs.swapaxes(0, 1).reshape(B, nc * c, H, hd)[:, :L].reshape(B, L, D)
+    out = jnp.einsum("ble,ed->bld", h.astype(cd), p["wo"].astype(cd)).astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = (C_last.astype(state[0].dtype), n_last.astype(state[1].dtype))
+    return out, new_state
+
+
+def mlstm_decode_step(p: Params, x: jax.Array, cfg,
+                      state: Tuple[jax.Array, jax.Array]):
+    B = x.shape[0]
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    cd = jnp.dtype(cfg.compute_dtype)
+    q, k, v, logi, logf = _mlstm_gates(p, x, cfg)  # L=1
+    C_prev, n_prev = (s.astype(jnp.float32) for s in state)
+    f = jnp.exp(logf[:, 0])  # (B,H)
+    i = jnp.exp(logi[:, 0])
+    C_new = f[:, :, None, None] * C_prev + i[:, :, None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k[:, 0], v[:, 0])
+    n_new = f[:, :, None] * n_prev + i[:, :, None] * k[:, 0]
+    num = jnp.einsum("bhd,bhde->bhe", q[:, 0], C_new)
+    den = jnp.einsum("bhd,bhd->bh", q[:, 0], n_new)[..., None]
+    h = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(B, 1, cfg.d_model)
+    out = jnp.einsum("ble,ed->bld", h.astype(cd), p["wo"].astype(cd)).astype(x.dtype)
+    return out, (C_new.astype(state[0].dtype), n_new.astype(state[1].dtype))
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return (jnp.zeros((batch, H, hd, hd), dtype), jnp.zeros((batch, H, hd), dtype))
+
+
+def mlstm_block_ref(p: Params, x: jax.Array, cfg) -> jax.Array:
+    """Sequential oracle."""
+    B, L, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    cd = jnp.dtype(cfg.compute_dtype)
+    q, k, v, logi, logf = _mlstm_gates(p, x, cfg)
+
+    def step(carry, inp):
+        C, n = carry
+        qt, kt, vt, lit, lft = inp
+        f = jnp.exp(lft)
+        i = jnp.exp(lit)
+        C = f[:, :, None, None] * C + i[:, :, None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kt, vt)
+        n = f[:, :, None] * n + i[:, :, None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.einsum("bhd,bhd->bh", qt, n)[..., None]
+        return (C, n), num / jnp.maximum(jnp.abs(den), 1.0)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    _, hs = jax.lax.scan(step, (C0, n0), tuple(
+        a.swapaxes(0, 1) for a in (q, k, v, logi, logf)))
+    h = hs.swapaxes(0, 1).reshape(B, L, D)
+    return jnp.einsum("ble,ed->bld", h.astype(cd), p["wo"].astype(cd)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (associative-scan form)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg) -> Params:
+    D = cfg.d_model
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    std = D ** -0.5
+    return {
+        "w_zifo": truncated_normal(ks[0], (D, 4 * D), std, dtype),
+        "b_zifo": jnp.zeros((4 * D,), dtype),
+        "wo": truncated_normal(ks[1], (D, D), std, dtype),
+    }
+
+
+def _slstm_gates(p: Params, x: jax.Array, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    pre = jnp.einsum("bld,dg->blg", x.astype(cd), p["w_zifo"].astype(cd))
+    pre = pre.astype(jnp.float32) + p["b_zifo"].astype(jnp.float32)
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    return (jnp.tanh(z), jax.nn.sigmoid(i), jax.nn.sigmoid(f),
+            jax.nn.sigmoid(o))
+
+
+def slstm_block(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,  # c (B,D), n (B,D)
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    B, L, D = x.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    z, i, f, o = _slstm_gates(p, x, cfg)
+
+    def combine(a, b):
+        (fa, ca, na), (fb, cb, nb) = a, b
+        return (fa * fb, fb * ca + cb, fb * na + nb)
+
+    fs_in, cs_in, ns_in = f, i * z, i
+    if state is not None:
+        # fold the carry in as a virtual step -1 holding (1, c0, n0)
+        c0, n0 = (s.astype(jnp.float32) for s in state)
+        fs_in = jnp.concatenate([jnp.ones_like(c0)[:, None], fs_in], axis=1)
+        cs_in = jnp.concatenate([c0[:, None], cs_in], axis=1)
+        ns_in = jnp.concatenate([n0[:, None], ns_in], axis=1)
+    fs, cs, ns = jax.lax.associative_scan(combine, (fs_in, cs_in, ns_in), axis=1)
+    if state is not None:
+        cs, ns = cs[:, 1:], ns[:, 1:]
+    h = o * cs / jnp.maximum(jnp.abs(ns), 1.0)
+    out = jnp.einsum("ble,ed->bld", h.astype(cd), p["wo"].astype(cd)).astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = (cs[:, -1].astype(state[0].dtype), ns[:, -1].astype(state[1].dtype))
+    return out, new_state
+
+
+def slstm_decode_step(p: Params, x: jax.Array, cfg,
+                      state: Tuple[jax.Array, jax.Array]):
+    z, i, f, o = _slstm_gates(p, x, cfg)  # (B,1,D)
+    c_prev, n_prev = (s.astype(jnp.float32) for s in state)
+    c = f[:, 0] * c_prev + i[:, 0] * z[:, 0]
+    n = f[:, 0] * n_prev + i[:, 0]
+    h = (o[:, 0] * c / jnp.maximum(jnp.abs(n), 1.0))[:, None]
+    cd = jnp.dtype(cfg.compute_dtype)
+    out = jnp.einsum("ble,ed->bld", h.astype(cd), p["wo"].astype(cd)).astype(x.dtype)
+    return out, (c.astype(state[0].dtype), n.astype(state[1].dtype))
+
+
+def init_slstm_state(cfg, batch: int, dtype=jnp.float32):
+    return (jnp.zeros((batch, cfg.d_model), dtype),
+            jnp.zeros((batch, cfg.d_model), dtype))

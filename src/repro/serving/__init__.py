@@ -1,0 +1,1 @@
+from .engine import Engine, Request, make_decode_step, make_prefill_step  # noqa: F401

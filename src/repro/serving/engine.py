@@ -1,0 +1,101 @@
+"""Batched serving engine: prefill + lockstep decode with wave-style
+continuous batching.
+
+A wave = a fixed batch of requests padded to a common prompt length. The
+engine prefills the whole wave in one pjit'd call (chunked-sequence forward
+writes the KV cache / recurrent state), then decodes in lockstep; finished
+sequences are masked. When every sequence in a wave finishes, the next wave
+is formed from the queue. This is the batching regime the decode_32k /
+long_500k dry-run cells lower: serve_step = one token for the whole batch
+against a seq_len-deep cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0  # 0 = greedy
+    out_tokens: Optional[np.ndarray] = None
+
+
+def make_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
+    def prefill(params, cache, tokens):  # tokens (B, Lp)
+        logits, cache, _ = T.forward(params, cfg, tokens=tokens, cache=cache,
+                                     cache_index=jnp.zeros((), jnp.int32),
+                                     use_pallas=use_pallas)
+        return logits[:, -1], cache
+    return jax.jit(prefill, donate_argnums=(1,))
+
+
+def make_decode_step(cfg: ModelConfig, use_pallas: bool = False):
+    def decode(params, cache, token, index):  # token (B,1), index scalar
+        logits, cache, _ = T.forward(params, cfg, tokens=token, cache=cache,
+                                     cache_index=index, decode=True,
+                                     use_pallas=use_pallas)
+        return logits[:, -1], cache
+    return jax.jit(decode, donate_argnums=(1,))
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: PyTree, max_len: int = 512,
+                 batch_size: int = 4, use_pallas: bool = False, seed: int = 0):
+        assert cfg.causal, "serving requires a decoder model"
+        self.cfg, self.params = cfg, params
+        self.max_len, self.batch_size = max_len, batch_size
+        self.prefill_step = make_prefill_step(cfg, use_pallas)
+        self.decode_step = make_decode_step(cfg, use_pallas)
+        self.key = jax.random.PRNGKey(seed)
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        B = len(wave)
+        Lp = max(len(r.prompt) for r in wave)
+        prompts = np.zeros((B, Lp), np.int32)
+        for i, r in enumerate(wave):  # left-pad to right-align the prompts
+            prompts[i, Lp - len(r.prompt):] = r.prompt
+        cache = T.init_cache(self.cfg, B, self.max_len)
+        logits, cache = self.prefill_step(self.params, cache,
+                                          jnp.asarray(prompts))
+        max_new = max(r.max_new_tokens for r in wave)
+        temperature = max(r.temperature for r in wave)
+        out = np.zeros((B, max_new), np.int32)
+        tok = self._sample(logits, temperature)
+        index = jnp.asarray(Lp, jnp.int32)
+        for t in range(max_new):
+            out[:, t] = np.asarray(tok)
+            if t == max_new - 1 or int(index) >= self.max_len - 1:
+                break
+            logits, cache = self.decode_step(self.params, cache,
+                                             tok[:, None], index)
+            tok = self._sample(logits, temperature)
+            index = index + 1
+        for i, r in enumerate(wave):
+            r.out_tokens = out[i, :r.max_new_tokens]
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Continuous wave batching over the queue."""
+        queue = list(requests)
+        while queue:
+            wave, queue = queue[:self.batch_size], queue[self.batch_size:]
+            self._run_wave(wave)
+        return requests

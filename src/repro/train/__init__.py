@@ -1,0 +1,1 @@
+from . import checkpoint, optimizer, trainer  # noqa: F401

@@ -1,0 +1,129 @@
+"""Closed-form bound tests (Thms 2.1/2.2/2.3) + hypothesis properties."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bounds import (C_p, combined_parallel_bound, matmul_bound,
+                               memory_independent_parallel_bound,
+                               parallel_bound, single_processor_bound,
+                               small_filter_regime)
+from repro.core.conv_model import (BF16_ACC32, ConvShape, Precision,
+                                   matmul_as_conv, resnet50_layers)
+
+
+def test_Cp_standard_precision():
+    assert C_p(Precision(1, 1, 1)) == pytest.approx(9 / 4)
+
+
+def test_Cp_triangle_violated():
+    # p_O > p_I + p_F -> C_p = p_O (p_I + p_F)
+    assert C_p(Precision(1, 1, 3)) == pytest.approx(3 * 2)
+    assert C_p(Precision(4, 1, 1)) == pytest.approx(4 * 2)
+
+
+def test_single_processor_standard_form():
+    """X >= max{|I|+|F|+|O|, 9G/4M - M, 2G(sw sh)^.5/(wF hF M)^.5 - 2M}."""
+    s = ConvShape(N=8, c_I=16, c_O=32, w_O=10, h_O=10, w_F=3, h_F=3)
+    M = 4096.0
+    b = single_processor_bound(s, M)
+    G = s.G
+    assert b.terms["per_M"] == pytest.approx(9 * G / (4 * M) - M)
+    assert b.terms["small_filter"] == pytest.approx(2 * G / math.sqrt(9 * M) - 2 * M)
+    assert b.terms["memory_independent"] == pytest.approx(
+        s.input_size + s.filter_size + s.output_size)
+
+
+def test_small_filter_regime_boundary():
+    """Third bound eclipses the second iff wF hF < 64 M sw sh / 81 (§3.1)."""
+    s = ConvShape(N=4, c_I=8, c_O=8, w_O=64, h_O=64, w_F=3, h_F=3)
+    M = 1e4
+    assert small_filter_regime(s, M)
+    b = single_processor_bound(s, M)
+    assert b.terms["small_filter"] > b.terms["per_M"]
+
+
+def test_matmul_bound_matches_classical():
+    """7NL specialization must reproduce 2mnk/sqrt(M) - 2M for matmul."""
+    m = n = k = 512
+    M = 2048.0
+    b = matmul_bound(m, n, k, M)
+    classical = 2 * m * n * k / math.sqrt(M) - 2 * M
+    assert b == pytest.approx(classical)
+
+
+def test_parallel_bound_divides_by_P():
+    s = resnet50_layers(100)["conv2_x"]
+    M = 2 ** 16
+    b1 = parallel_bound(s, 1, M).value
+    b16 = parallel_bound(s, 16, M).value
+    assert b16 < b1
+    # leading term scales 1/P
+    assert b16 + 2 * M == pytest.approx((b1 + 2 * M) / 16, rel=0.2)
+
+
+def test_memory_independent_bound_regimes():
+    """Thm 2.3 only binds once P is large enough that the owned share A_P/P
+    is below the (G/P)^{1/2} replication term (paper §4.1: 'This becomes a
+    concern if ... the number of processors is large relative to the size of
+    the computation')."""
+    s = resnet50_layers(1000)["conv3_x"]
+    A_P = max(s.input_size, s.filter_size, s.output_size)
+    P_crit = A_P ** 2 / s.G
+    assert memory_independent_parallel_bound(s, 4).value < 0  # small P: trivial
+    assert memory_independent_parallel_bound(s, int(4 * P_crit)).value > 0
+
+
+shape_strategy = st.builds(
+    ConvShape,
+    N=st.integers(1, 8),
+    c_I=st.integers(1, 16),
+    c_O=st.integers(1, 16),
+    w_O=st.integers(4, 32),
+    h_O=st.integers(4, 32),
+    w_F=st.integers(1, 4),
+    h_F=st.integers(1, 4),
+    sw=st.just(1),
+    sh=st.just(1),
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(shape=shape_strategy, logM=st.floats(8, 20))
+def test_bound_monotone_decreasing_in_M(shape, logM):
+    """More cache can never increase the M-dependent lower bound terms."""
+    M = 2.0 ** logM
+    b1 = single_processor_bound(shape, M)
+    b2 = single_processor_bound(shape, 2 * M)
+    assert b2.terms["per_M"] <= b1.terms["per_M"] + 1e-6
+    assert b2.terms["small_filter"] <= b1.terms["small_filter"] + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(shape=shape_strategy)
+def test_bound_at_least_io(shape):
+    """The max-bound never drops below compulsory IO."""
+    b = single_processor_bound(shape, 2 ** 30)
+    assert b.value >= shape.words() - 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=shape_strategy, P=st.sampled_from([2, 4, 16, 64]))
+def test_parallel_at_most_single(shape, P):
+    """P processors can only reduce the per-processor M-decay bound."""
+    M = 2 ** 12
+    bp = parallel_bound(shape, P, M).terms["per_M"]
+    bs = single_processor_bound(shape, M).terms["per_M"]
+    assert bp <= bs + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    pI=st.floats(0.25, 4), pF=st.floats(0.25, 4), pO=st.floats(0.25, 4))
+def test_Cp_bounds(pI, pF, pO):
+    """C_p is p_T^2/4 under triangle, else p_j(p_k+p_l); both <= p_T^2/4 + eps
+    and positive."""
+    c = C_p(Precision(pI, pF, pO))
+    pT = pI + pF + pO
+    assert 0 < c <= pT ** 2 / 4 + 1e-9

@@ -1,0 +1,84 @@
+"""HBL machinery tests: the lattice, the paper's constraint table, and the
+optimal exponents for 7NL CNN / the lifted small-filter form / matmul."""
+
+import numpy as np
+import pytest
+
+from repro.core.hbl import (Homomorphism, conv7nl_lifted_phis, conv7nl_phis,
+                            hbl_constraints, matmul_phis, solve_exponents,
+                            subgroup_lattice)
+
+
+def test_conv7nl_kernel_ranks():
+    phi_I, phi_F, phi_O = conv7nl_phis(1, 1)
+    assert phi_I.kernel().rank == 3  # (i3, i4, i5, -i4, -i5) free in 3 dims
+    assert phi_F.kernel().rank == 3  # (i1, i4, i5)
+    assert phi_O.kernel().rank == 3  # (i2, i6, i7)
+
+
+def test_paper_constraint_table():
+    """§3.1: deduped constraints must include the paper's four:
+    1<=sI+sF, 1<=sI+sO, 1<=sF+sO, 2<=sI+sF+sO (as normalized rank rows)."""
+    cons = hbl_constraints(conv7nl_phis(1, 1))
+    normalized = set()
+    for rk, imgs in cons:
+        normalized.add(tuple(r / rk for r in imgs))
+    # 1 <= sI + sO  -> row (1, 0, 1)
+    assert (1.0, 0.0, 1.0) in normalized
+    assert (1.0, 1.0, 0.0) in normalized
+    assert (0.0, 1.0, 1.0) in normalized
+    # 2 <= sI + sF + sO -> normalized row (1/2, 1/2, 1/2)
+    assert (0.5, 0.5, 0.5) in normalized
+
+
+@pytest.mark.parametrize("sw,sh", [(1, 1), (2, 2), (2, 1), (3, 2)])
+def test_conv7nl_exponent_sum_is_2(sw, sh):
+    """The minimal HBL exponent sum is 2 regardless of stride -> the
+    Omega(G/M) second bound of Thm 2.1."""
+    _, total = solve_exponents(conv7nl_phis(sw, sh))
+    assert abs(total - 2.0) < 1e-9
+
+
+def test_lifted_exponents_are_half():
+    """Lemma 3.4's lifted maps form a tensor contraction: s = (1/2,1/2,1/2)."""
+    s, total = solve_exponents(conv7nl_lifted_phis())
+    assert abs(total - 1.5) < 1e-9
+    np.testing.assert_allclose(s, [0.5, 0.5, 0.5], atol=1e-9)
+
+
+def test_matmul_loomis_whitney():
+    s, total = solve_exponents(matmul_phis())
+    assert abs(total - 1.5) < 1e-9
+    np.testing.assert_allclose(s, [0.5, 0.5, 0.5], atol=1e-9)
+
+
+def test_lattice_closure_contains_sums_and_intersections():
+    phis = conv7nl_phis(1, 1)
+    kernels = [p.kernel() for p in phis]
+    lat = subgroup_lattice(kernels)
+    ranks = sorted(s.rank for s in lat)
+    # kernels rank 3; pairwise sums rank 5..6; triple sum rank 7
+    assert 7 in ranks  # full space reached
+    assert all(r >= 1 for r in ranks)
+    for a in kernels:
+        assert a in lat
+
+
+def test_feasibility_of_paper_exponents():
+    """s_j = 2 p_j / p_T satisfies every lattice constraint when the triangle
+    condition holds (Lemma 3.2's choice)."""
+    phis = conv7nl_phis(1, 1)
+    cons = hbl_constraints(phis)
+    for (pI, pF, pO) in [(1, 1, 1), (1, 1, 2), (0.5, 0.5, 1), (0.25, 0.25, 0.5)]:
+        pT = pI + pF + pO
+        s = (2 * pI / pT, 2 * pF / pT, 2 * pO / pT)
+        if max(pI, pF, pO) > pT - max(pI, pF, pO):
+            continue  # triangle fails; Lemma 3.3 regime
+        for rk, imgs in cons:
+            assert rk <= sum(si * ri for si, ri in zip(s, imgs)) + 1e-9
+
+
+def test_identity_map_requires_s_1():
+    ident = Homomorphism([[1, 0], [0, 1]], "id")
+    s, total = solve_exponents([ident])
+    assert abs(total - 1.0) < 1e-9

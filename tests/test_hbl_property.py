@@ -1,0 +1,107 @@
+"""Property tests of the HBL machinery itself: the inequality
+|V| <= prod |phi_j(V)|^{s_j} must hold NUMERICALLY for the LP exponents on
+random finite sets V — this checks the whole pipeline (kernels -> lattice ->
+constraints -> LP) against the theorem it implements, not just against
+hand-derived special cases."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bounds import single_processor_bound
+from repro.core.conv_model import ConvShape
+from repro.core.hbl import (Homomorphism, conv7nl_lifted_phis, conv7nl_phis,
+                            matmul_phis, solve_exponents)
+from repro.core.tiling import MemoryModel, optimize_blocking
+
+
+def _check_hbl_on_random_sets(phis, s, rng, d, n_sets=20, n_pts=40):
+    for _ in range(n_sets):
+        V = rng.integers(-3, 4, size=(n_pts, d))
+        V = np.unique(V, axis=0)
+        lhs = len(V)
+        rhs = 1.0
+        for phi, sj in zip(phis, s):
+            mat = np.array([[float(x) for x in row] for row in phi.mat])
+            img = np.unique(np.round(V @ mat.T, 9), axis=0)
+            rhs *= len(img) ** sj
+        assert lhs <= rhs * (1 + 1e-9), (lhs, rhs)
+
+
+def test_hbl_inequality_numerically_conv7nl():
+    phis = conv7nl_phis(1, 1)
+    s, _ = solve_exponents(phis)
+    _check_hbl_on_random_sets(phis, s, np.random.default_rng(0), d=7)
+
+
+def test_hbl_inequality_numerically_strided():
+    phis = conv7nl_phis(2, 3)
+    s, _ = solve_exponents(phis)
+    _check_hbl_on_random_sets(phis, s, np.random.default_rng(1), d=7)
+
+
+def test_hbl_inequality_numerically_lifted():
+    phis = conv7nl_lifted_phis()
+    s, _ = solve_exponents(phis)
+    _check_hbl_on_random_sets(phis, s, np.random.default_rng(2), d=7)
+
+
+def test_hbl_inequality_numerically_matmul():
+    phis = matmul_phis()
+    s, _ = solve_exponents(phis)
+    _check_hbl_on_random_sets(phis, s, np.random.default_rng(3), d=3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_hbl_inequality_random_projections(seed):
+    """Random coordinate-projection homomorphisms on Z^5: the LP exponents
+    must satisfy the inequality on random finite sets."""
+    rng = np.random.default_rng(seed)
+    d = 5
+    phis = []
+    for j in range(3):
+        # random subset of coordinates (nonempty)
+        keep = rng.permutation(d)[: int(rng.integers(1, d + 1))]
+        rows = [[1 if c == k else 0 for c in range(d)] for k in sorted(keep)]
+        phis.append(Homomorphism(rows, name=f"p{j}"))
+    # only solvable if the union of kept coordinates covers Z^d; else the
+    # constraint rank(Z^d) <= sum s_j rank(phi_j) is infeasible with s <= 1
+    covered = set()
+    for phi in phis:
+        for row in phi.mat:
+            covered.add(tuple(row).index(1))
+    if len(covered) < d:
+        return
+    s, _ = solve_exponents(phis)
+    _check_hbl_on_random_sets(phis, s, rng, d=d, n_sets=8, n_pts=30)
+
+
+# ---------------------------------------------------------------------------
+# Attainability never beats the bound (the theorem's other face)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    N=st.integers(1, 16), cI=st.integers(1, 32), cO=st.integers(1, 32),
+    wO=st.integers(3, 24), hO=st.integers(3, 24),
+    wF=st.sampled_from([1, 3, 5]), hF=st.sampled_from([1, 3]),
+    logM=st.floats(11, 17),
+)
+def test_blocking_never_beats_thm21(N, cI, cO, wO, hO, wF, hF, logM):
+    """The LP blocking's modeled communication must respect the Thm 2.1
+    lower bound (within boundary modeling slack): an 'algorithm' below the
+    bound would falsify either the bound or the volume model."""
+    shape = ConvShape(N=N, c_I=cI, c_O=cO, w_O=wO, h_O=hO, w_F=wF, h_F=hF)
+    mem = MemoryModel(M=2.0 ** logM, mode="unified", double_buffer=False)
+    blk = optimize_blocking(shape, mem)
+    b = single_processor_bound(shape, mem.M_eff)
+    # the compulsory-IO term is restated with *touched* input elements:
+    # the paper's |I| convention (sw*wO + wF) includes a boundary margin of
+    # sw/sh elements the convolution never reads, which the volume model
+    # (correctly) does not charge.
+    touched_io = (N * cI * (wO - 1 + wF) * (hO - 1 + hF)
+                  + shape.filter_size + shape.output_size)
+    lb = max(b.terms["per_M"], b.terms["small_filter"], touched_io)
+    assert blk.comm_volume() >= 0.9 * lb

@@ -1,0 +1,137 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret=True) vs the
+pure-jnp oracles in kernels/ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.conv1d import conv1d_causal
+from repro.kernels.conv2d import conv2d, plan_conv_tiles
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul, plan_tiles
+
+KEY = jax.random.PRNGKey(0)
+K2 = jax.random.PRNGKey(1)
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k", [
+    (8, 128, 128), (256, 512, 128), (100, 300, 77), (512, 512, 512),
+    (1, 128, 64), (130, 257, 129),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, n, k, dtype):
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(K2, (k, n), dtype)
+    got = matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+def test_matmul_tiles_divide_padded_problem():
+    for (m, n, k) in [(4096, 4096, 4096), (512, 11008, 2048), (7, 13, 5)]:
+        bm, bn, bk = plan_tiles(m, n, k)
+        assert bm >= 1 and bn >= 1 and bk >= 1
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    (2, 8, 16, 12, 12, 3, 3, 1, 1),
+    (4, 3, 32, 20, 20, 7, 7, 2, 2),
+    (1, 16, 8, 9, 9, 1, 1, 1, 1),
+    (3, 5, 7, 11, 13, 3, 5, 1, 2),
+    (2, 4, 4, 8, 8, 2, 2, 2, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv2d_sweep(case, dtype):
+    N, cI, cO, H, W, hF, wF, sh, sw = case
+    x = jax.random.normal(KEY, (N, cI, H, W), dtype)
+    w = jax.random.normal(K2, (cO, cI, hF, wF), dtype)
+    got = conv2d(x, w, stride=(sh, sw))
+    want = ref.conv2d_ref(x, w, stride=(sh, sw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+def test_conv2d_tiles_from_lp_fit_vmem():
+    """The LP tile triple must keep the blocks inside half-VMEM."""
+    from repro.core.tiling import TPU_VMEM_WORDS
+    N, cI, cO, hO, wO, hF, wF = 64, 64, 256, 56, 56, 3, 3
+    bN, bcI, bcO = plan_conv_tiles(N, cI, cO, hO, wO, hF, wF, 1, 1, 16)
+    H, W = hO + hF - 1, wO + wF - 1
+    words = (0.5 * bN * bcI * H * W + 0.5 * bcO * bcI * hF * wF
+             + 1.0 * bN * bcO * hO * wO)
+    assert words <= TPU_VMEM_WORDS / 2 * 1.01
+
+
+# ---------------------------------------------------------------------------
+# conv1d
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,D,K", [(2, 16, 32, 4), (3, 100, 64, 3),
+                                     (1, 7, 5, 2), (2, 33, 130, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv1d_sweep(B, L, D, K, dtype):
+    x = jax.random.normal(KEY, (B, L, D), dtype)
+    w = jax.random.normal(K2, (K, D), dtype)
+    got = conv1d_causal(x, w)
+    want = ref.conv1d_causal_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Hkv,Lq,Lk,Dh,causal,off", [
+    (1, 4, 4, 64, 64, 32, True, 0),
+    (2, 8, 2, 33, 33, 64, True, 0),
+    (1, 2, 2, 1, 100, 32, True, 99),   # decode: 1 query vs deep cache
+    (1, 2, 1, 50, 70, 16, False, 0),   # encoder + ragged padding
+    (1, 1, 1, 200, 200, 128, True, 0),
+])
+def test_flash_attention_sweep(B, H, Hkv, Lq, Lk, Dh, causal, off):
+    q = jax.random.normal(KEY, (B, H, Lq, Dh), jnp.float32) * 0.3
+    k = jax.random.normal(K2, (B, Hkv, Lk, Dh), jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, Lk, Dh), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, q_offset=off)
+    rep = H // Hkv
+    kk = jnp.repeat(k, rep, axis=1).reshape(B * H, Lk, Dh)
+    vv = jnp.repeat(v, rep, axis=1).reshape(B * H, Lk, Dh)
+    got = flash_attention(q.reshape(B * H, Lq, Dh), kk, vv, causal=causal,
+                          q_offset=off, block_q=32, block_k=32
+                          ).reshape(B, H, Lq, Dh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch: xla path == pallas path
+# ---------------------------------------------------------------------------
+
+def test_ops_paths_agree():
+    a = jax.random.normal(KEY, (64, 96), jnp.float32)
+    b = jax.random.normal(K2, (96, 128), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.matmul(a, b, use_pallas=False)),
+        np.asarray(ops.matmul(a, b, use_pallas=True)), rtol=1e-5, atol=1e-5)
+
+    q = jax.random.normal(KEY, (1, 4, 32, 16), jnp.float32) * 0.3
+    k = jax.random.normal(K2, (1, 2, 32, 16), jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 32, 16), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.attention(q, k, v, use_pallas=False)),
+        np.asarray(ops.attention(q, k, v, use_pallas=True)),
+        rtol=2e-3, atol=2e-3)

@@ -1,0 +1,75 @@
+"""Serving engine tests: wave batching, greedy consistency with full
+forward, recurrent-arch decode."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import transformer as T
+from repro.serving.engine import Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params_and_cfg(arch):
+    cfg = dataclasses.replace(get_smoke(arch), compute_dtype="float32")
+    return T.init_params(KEY, cfg), cfg
+
+
+def test_greedy_matches_manual_decode():
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    eng = Engine(cfg, params, max_len=32, batch_size=1)
+    req = Request(prompt=prompt, max_new_tokens=6)
+    eng.serve([req])
+
+    # manual greedy via repeated full forwards (no cache)
+    toks = list(prompt)
+    for _ in range(6):
+        lg, _, _ = T.forward(params, cfg,
+                             tokens=jnp.asarray([toks], jnp.int32))
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    np.testing.assert_array_equal(req.out_tokens, np.array(toks[len(prompt):]))
+
+
+def test_wave_batching_processes_all_requests():
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(2, 8)).astype(np.int32),
+                    max_new_tokens=4) for _ in range(5)]
+    eng = Engine(cfg, params, max_len=32, batch_size=2)  # 3 waves
+    eng.serve(reqs)
+    for r in reqs:
+        assert r.out_tokens is not None and len(r.out_tokens) == 4
+        assert r.out_tokens.min() >= 0
+
+
+@pytest.mark.parametrize("arch", ["xlstm_1_3b", "jamba_1_5_large"])
+def test_recurrent_arch_serving(arch):
+    """SSM/hybrid archs decode through recurrent state, not a KV window."""
+    params, cfg = _params_and_cfg(arch)
+    eng = Engine(cfg, params, max_len=32, batch_size=2)
+    reqs = [Request(prompt=np.array([1, 2, 3], np.int32), max_new_tokens=4),
+            Request(prompt=np.array([9, 8], np.int32), max_new_tokens=4)]
+    eng.serve(reqs)
+    for r in reqs:
+        assert len(r.out_tokens) == 4
+
+
+def test_batched_left_padding_preserves_per_request_output():
+    """A request's greedy output must not depend on its batch-mates."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    p1 = np.array([3, 1, 4, 1, 5], np.int32)
+    p2 = np.array([7], np.int32)
+
+    solo = Request(prompt=p1, max_new_tokens=4)
+    Engine(cfg, params, max_len=32, batch_size=1).serve([solo])
+
+    pair = [Request(prompt=p1, max_new_tokens=4),
+            Request(prompt=p2, max_new_tokens=4)]
+    Engine(cfg, params, max_len=32, batch_size=2).serve(pair)
+    np.testing.assert_array_equal(solo.out_tokens, pair[0].out_tokens)

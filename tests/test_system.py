@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests for the paper's system: the bound -> tiling ->
+kernel -> model -> distribution chain working together."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BF16_ACC32, GEMMINI, INT8_ACC32, ConvShape,
+                        MemoryModel, optimize_blocking, resnet50_layers,
+                        single_processor_bound)
+from repro.core.algorithms import parallel_volumes, single_processor_volumes
+
+
+def test_volumes_respect_lower_bound_single_processor():
+    """No modeled algorithm may beat the Thm 2.1 bound (within modeling
+    slack at the boundary)."""
+    for name, s in resnet50_layers(100).items():
+        for M in (2 ** 14, 2 ** 18):
+            v = single_processor_volumes(s, M)
+            lb = v.pop("lower_bound")
+            for alg, vol in v.items():
+                assert vol >= 0.95 * lb, f"{name} {alg} below bound at M={M}"
+
+
+def test_paper_fig2_ordering():
+    """Fig 2 qualitative claims: blocking tracks the bound closest; naive is
+    worst; FFT/Winograd scale worse than blocking/im2col for conv1."""
+    s = resnet50_layers(1000)["conv1"]
+    v = single_processor_volumes(s, 2 ** 18)
+    assert v["blocking"] <= v["im2col"]
+    assert v["im2col"] <= v["fft"]
+    assert v["naive"] == max(x for k, x in v.items() if k != "lower_bound")
+
+
+def test_paper_fig3_ordering():
+    """Fig 3: 'blocking outperforms im2col considerably... im2col performs
+    orders of magnitude better [than FFT/Winograd]'."""
+    s = resnet50_layers(1000)["conv2_x"]
+    v = parallel_volumes(s, 64, 2 ** 20)
+    assert v["blocking"] < v["im2col"]
+    assert v["im2col"] * 3 < v["fft"]
+    assert v["im2col"] * 3 < v["winograd"]
+
+
+def test_gemmini_regime_tiling_beats_vendor_proxy():
+    """§5 analogue: the LP tiling must use less modeled communication than a
+    'vendor-style' max-square heuristic tiling on the ResNet50 sizes."""
+    from repro.core.tiling import Blocking
+
+    wins = 0
+    for name, s in resnet50_layers(1000).items():
+        s = s.with_precision(INT8_ACC32)
+        lp = optimize_blocking(s, GEMMINI)
+        # vendor proxy: greedy channel-first tile (what GEMMINI's supplied
+        # tiler roughly does: fill the array dims, then grow channels)
+        d = Blocking.lifted_bounds(s)
+        vendor = {k: 1 for k in d}
+        for k in ("cO", "cI", "wO", "hO", "N"):
+            while vendor[k] * 2 <= d[k]:
+                vendor[k] *= 2
+                if not Blocking(vendor, s).fits(GEMMINI):
+                    vendor[k] //= 2
+                    break
+        vblk = Blocking(vendor, s)
+        if lp.comm_volume() <= vblk.comm_volume():
+            wins += 1
+    assert wins >= 4, f"LP tiling won only {wins}/5 ResNet50 layers"
+
+
+def test_mixed_precision_tightens_bound():
+    """Lower precisions reduce the bound (the motivation for the paper's
+    mixed-precision analysis and our int8 wire compression)."""
+    s = resnet50_layers(100)["conv2_x"]
+    M = 2 ** 16
+    full = single_processor_bound(s, M).value
+    bf16 = single_processor_bound(s.with_precision(BF16_ACC32), M).value
+    int8 = single_processor_bound(s.with_precision(INT8_ACC32), M).value
+    assert int8 < bf16 < full
+
+
+def test_less_memory_never_less_communication():
+    s = resnet50_layers(64)["conv3_x"].with_precision(BF16_ACC32)
+    m1 = MemoryModel(M=2 ** 18, mode="unified", double_buffer=True)
+    m2 = MemoryModel(M=2 ** 17, mode="unified", double_buffer=True)
+    v1 = optimize_blocking(s, m1).comm_volume()
+    v2 = optimize_blocking(s, m2).comm_volume()
+    assert v2 >= v1 * 0.99
+
+
+def test_end_to_end_conv_through_kernel():
+    """ConvShape -> LP tiles -> Pallas kernel -> matches oracle."""
+    from repro.kernels.conv2d import conv2d
+    from repro.kernels.ref import conv2d_ref
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 8, 18, 18), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8, 3, 3), jnp.float32)
+    got = conv2d(x, w, stride=(1, 1))
+    want = conv2d_ref(x, w, stride=(1, 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
