@@ -16,7 +16,8 @@ from __future__ import annotations
 import time
 
 from repro.core.conv_model import INT8_ACC32, BF16_ACC32, resnet50_layers
-from repro.core.tiling import GEMMINI, TPU_VMEM, Blocking, optimize_blocking
+from repro.core.tiling import Blocking
+from repro.plan import GEMMINI, TPU_V5E, ConvSpec, plan
 
 
 def vendor_tiling(shape, mem) -> Blocking:
@@ -32,19 +33,20 @@ def vendor_tiling(shape, mem) -> Blocking:
 
 
 def run(csv_rows: list) -> None:
-    for mem_name, mem, prec in (("gemmini", GEMMINI, INT8_ACC32),
-                                ("tpu_vmem", TPU_VMEM, BF16_ACC32)):
+    for target, prec in ((GEMMINI, INT8_ACC32), (TPU_V5E, BF16_ACC32)):
+        mem = target.memory_model()
         for lname, s in resnet50_layers(1000).items():
             s = s.with_precision(prec)
             t0 = time.perf_counter()
-            ours = optimize_blocking(s, mem)
+            ours = plan(ConvSpec.from_shape(s), target)
             dt_us = (time.perf_counter() - t0) * 1e6
             vend = vendor_tiling(s, mem)
-            ours_v, vend_v = ours.comm_volume(), vend.comm_volume()
+            ours_v, vend_v = ours.comm_volume, vend.comm_volume()
             csv_rows.append((
-                f"fig4/{mem_name}/{lname}", f"{dt_us:.0f}",
+                f"fig4/{target.name}/{lname}", f"{dt_us:.0f}",
                 f"ours={ours_v:.3e}w vendor={vend_v:.3e}w "
-                f"ratio={ours_v / vend_v:.2f} tile={ours.as_conv_tile()}"))
+                f"ratio={ours_v / vend_v:.2f} eff={ours.efficiency:.2f} "
+                f"tile={ours.conv_tile()}"))
 
 
 if __name__ == "__main__":

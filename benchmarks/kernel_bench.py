@@ -9,7 +9,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.conv_model import Precision
 from repro.kernels import ops
+from repro.kernels.matmul import matmul as matmul_pallas
+from repro.plan import MatmulSpec, TPU_V5E, clear_plan_cache, plan
 
 
 def _time(fn, *args, iters=3):
@@ -31,6 +34,18 @@ def run(csv_rows: list) -> None:
         flops = 2 * m * n * k
         csv_rows.append((f"kernel/matmul_xla/{m}x{n}x{k}", f"{us_x:.0f}",
                          f"gflops={flops / us_x / 1e3:.1f}"))
+        # the unified planner: cold solve time + the plan the kernel consumes
+        spec = MatmulSpec(m, n, k, prec=Precision(0.5, 0.5, 1.0))
+        clear_plan_cache()
+        t0 = time.perf_counter()
+        ep = plan(spec, TPU_V5E)
+        plan_us = (time.perf_counter() - t0) * 1e6
+        csv_rows.append((f"plan/matmul/{m}x{n}x{k}", f"{plan_us:.0f}",
+                         f"tiles={ep.tiles} eff={ep.efficiency:.2f}"))
+        us_p = _time(lambda x, y: matmul_pallas(x, y, plan=ep), a, b)
+        csv_rows.append((f"kernel/matmul_pallas_interp/{m}x{n}x{k}",
+                         f"{us_p:.0f}",
+                         "interpret=True (correctness mode, not perf)"))
     # conv2d: ResNet conv3_x-like block at batch 8
     x = jax.random.normal(key, (8, 64, 30, 30), jnp.float32)
     w = jax.random.normal(key, (64, 64, 3, 3), jnp.float32)

@@ -1,27 +1,43 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--json out.json] [--only fig4]
 
 Prints ``name,us_per_call,derived`` CSV:
   fig2/*     - paper Fig 2 (single-processor volumes vs bound, mixed precision)
   fig3/*     - paper Fig 3 (parallel volumes vs bound)
   fig4/*     - paper Fig 4 / §5 (LP tiling vs vendor tiling, GEMMINI + TPU)
+  plan/*     - unified-planner solve times (repro.plan)
   kernel/*   - Pallas/XLA kernel micro-timings
   roofline/* - §Roofline rows from the dry-run artifacts
+
+``--json`` additionally writes the rows as a machine-readable list of
+``{"name", "us_per_call", "derived"}`` objects so successive PRs can diff the
+perf trajectory.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump rows as JSON to PATH")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names (e.g. 'fig4')")
+    args = ap.parse_args(argv)
+
     from . import (fig2_single_processor, fig3_parallel, fig4_gemmini_tiling,
                    kernel_bench, roofline_table)
 
     rows = [("name", "us_per_call", "derived")]
     for mod in (fig2_single_processor, fig3_parallel, fig4_gemmini_tiling,
                 kernel_bench, roofline_table):
+        if args.only and args.only not in mod.__name__:
+            continue
         try:
             mod.run(rows)
         except Exception:
@@ -29,6 +45,12 @@ def main() -> None:
             rows.append((f"{mod.__name__}/ERROR", "0", "see stderr"))
     for r in rows:
         print(",".join(str(x) for x in r))
+    if args.json:
+        header, body = rows[0], rows[1:]
+        with open(args.json, "w") as f:
+            json.dump([dict(zip(header, (str(x) for x in r))) for r in body],
+                      f, indent=1)
+        print(f"wrote {len(body)} rows to {args.json}")
 
 
 if __name__ == "__main__":

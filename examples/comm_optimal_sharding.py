@@ -1,9 +1,10 @@
 """The paper's parallel blocking LP driving real jax shardings.
 
-Builds an 8-fake-device mesh, asks core.sharding_opt for the comm-minimizing
-loop-axis -> mesh-axis binding of a convolution and of an LM GEMM, then
-actually executes the conv under those NamedShardings and cross-checks the
-result against the unsharded oracle.
+Builds an 8-fake-device mesh, asks the unified ``repro.plan`` planner (a
+mesh-bearing HardwareTarget makes ``plan()`` attach a ShardingPlan) for the
+comm-minimizing loop-axis -> mesh-axis binding of a convolution and of an LM
+GEMM, then actually executes the conv under those NamedShardings and
+cross-checks the result against the unsharded oracle.
 
     PYTHONPATH=src python examples/comm_optimal_sharding.py
 """
@@ -18,16 +19,18 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core import ConvShape, plan_conv_sharding, plan_gemm_sharding  # noqa: E402
 from repro.kernels.ref import conv2d_ref  # noqa: E402
+from repro.plan import ConvSpec, MatmulSpec, TPU_V5E, plan as make_plan  # noqa: E402
 
 
 def main():
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-    shape = ConvShape(N=8, c_I=16, c_O=32, w_O=14, h_O=14, w_F=3, h_F=3)
-    plan = plan_conv_sharding(shape, [("data", 4), ("model", 2)])
+    target = TPU_V5E.with_mesh((("data", 4), ("model", 2)))
+    ep = make_plan(ConvSpec(N=8, c_I=16, c_O=32, w_O=14, h_O=14, w_F=3, h_F=3),
+                   target)
+    plan = ep.sharding
     print(f"conv binding: {plan.binding} "
           f"(modeled {plan.comm_per_processor:.3e} words/chip)")
     print(f"  input  spec {plan.input_spec}")
@@ -49,7 +52,7 @@ def main():
     print(f"sharded conv vs oracle |err| = {err:.2e}")
     assert err < 1e-4
 
-    gplan = plan_gemm_sharding(4096, 2048, 512, [("data", 4), ("model", 2)])
+    gplan = make_plan(MatmulSpec(4096, 2048, 512), target).sharding
     print(f"\nGEMM (4096x2048x512) binding: {gplan.binding} "
           f"-> A rows on 'data', B cols on 'model' (Megatron-style)")
     print("OK")

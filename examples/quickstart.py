@@ -1,25 +1,28 @@
-"""Quickstart: the paper's pipeline on one convolution.
+"""Quickstart: the paper's pipeline on one convolution, through the unified
+``repro.plan`` API (HardwareTarget -> plan() -> kernel call).
 
-1. Pose a conv layer (ResNet50 conv2_x, mixed precision).
+1. Pose a conv layer (ResNet50 conv2_x, mixed precision) as a ``ConvSpec``.
 2. Compute the Thm 2.1 / 2.2 / 2.3 communication lower bounds.
-3. Solve the blocking LP (eq. 6) for a TPU-VMEM tiling and compare the
-   modeled communication of blocking / im2col / Winograd / FFT to the bound.
-4. Run the LP-tiled Pallas conv2d kernel (interpret mode) and check it
-   against the jnp oracle.
+3. ``plan()`` it for the TPU_V5E target: the blocking LP (eq. 6 + the §5
+   buffer model) solved against the target's memory hierarchy, with the
+   modeled communication, bound, and efficiency carried on the returned
+   ``ExecutionPlan``; compare blocking / im2col / Winograd / FFT volumes.
+4. Run the Pallas conv2d kernel from that same plan (interpret mode) and
+   check it against the jnp oracle.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (BF16_ACC32, GEMMINI, TPU_VMEM, ConvShape,
-                        memory_independent_parallel_bound, optimize_blocking,
-                        parallel_bound, single_processor_bound)
+from repro.core import (BF16_ACC32, FP32, ConvShape,
+                        memory_independent_parallel_bound, parallel_bound,
+                        single_processor_bound)
 from repro.core.algorithms import single_processor_volumes
 from repro.kernels.conv2d import conv2d
 from repro.kernels.ref import conv2d_ref
+from repro.plan import ConvSpec, TPU_V5E, plan
 
 
 def main():
@@ -29,7 +32,8 @@ def main():
     print(f"conv: {shape}")
     print(f"G = {shape.G:.3e} updates, arrays = {shape.words():.3e} words\n")
 
-    M = TPU_VMEM.M_eff
+    target = TPU_V5E
+    M = target.memory_model().M_eff
     b = single_processor_bound(shape, M)
     print(f"Thm 2.1 (single chip, M={M:.0f} words):")
     for k, v in b.terms.items():
@@ -41,10 +45,11 @@ def main():
     print(f"  memory-independent "
           f"{memory_independent_parallel_bound(shape, 256).value:.4e}\n")
 
-    blk = optimize_blocking(shape, TPU_VMEM)
-    print(f"LP blocking (VMEM model): {blk.as_conv_tile()}")
-    print(f"  modeled comm {blk.comm_volume():.4e} words "
-          f"({blk.comm_volume() / b.value:.2f}x bound)\n")
+    ep = plan(ConvSpec.from_shape(shape), target)
+    print(f"ExecutionPlan for {target.name}: tile={ep.conv_tile()}")
+    print(f"  kernel tiles (bN, b_cI, b_cO) = {ep.tiles}, grid = {ep.grid}")
+    print(f"  modeled comm {ep.comm_volume:.4e} words "
+          f"({ep.efficiency:.2f}x bound)\n")
 
     vols = single_processor_volumes(shape, M)
     lb = vols.pop("lower_bound")
@@ -52,11 +57,14 @@ def main():
     for alg, v in sorted(vols.items(), key=lambda kv: kv[1]):
         print(f"  {alg:10s} {v / lb:8.2f}x")
 
-    print("\nrunning the LP-tiled Pallas kernel (interpret mode)...")
+    print("\nrunning the Pallas kernel from the same plan (interpret mode)...")
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (2, 8, 16, 16), jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(1), (16, 8, 3, 3), jnp.float32)
-    got = conv2d(x, w)
+    small = plan(ConvSpec(N=2, c_I=8, c_O=16, w_O=14, h_O=14, w_F=3, h_F=3,
+                          prec=FP32),  # matches the f32 arrays below
+                 target)
+    got = conv2d(x, w, plan=small)
     want = conv2d_ref(x, w)
     err = float(jnp.max(jnp.abs(got - want)))
     print(f"  kernel vs oracle max |err| = {err:.2e}")

@@ -57,3 +57,29 @@ from .sharding_opt import (  # noqa: F401
     rank_lm_shardings,
 )
 from . import algorithms  # noqa: F401
+
+# ---------------------------------------------------------------------------
+# repro.plan re-exports (lazy to avoid a circular import: repro.plan itself
+# imports the core submodules above). ``repro.core.plan(...)`` etc. resolve to
+# the unified planner; the MemoryModel-level names above remain the low-level
+# building blocks. Note: ``repro.core.GEMMINI`` stays the legacy MemoryModel —
+# the HardwareTarget preset of the same name lives at ``repro.plan.GEMMINI``.
+# ---------------------------------------------------------------------------
+
+_PLAN_EXPORTS = (
+    "HardwareTarget", "ExecutionPlan", "ConvSpec", "MatmulSpec", "OpSpec",
+    "plan", "TPU_V5E", "CPU_INTERPRET", "get_target",
+    "clear_plan_cache", "save_plan_cache", "load_plan_cache",
+)
+
+
+def __getattr__(name):
+    if name in _PLAN_EXPORTS:
+        from repro import plan as _plan_mod
+
+        return getattr(_plan_mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_PLAN_EXPORTS))

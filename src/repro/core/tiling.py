@@ -373,25 +373,48 @@ def blocking_efficiency(shape: ConvShape, mem: MemoryModel) -> Tuple[float, floa
 # Matmul convenience: LP-tiled GEMM block shapes for the Pallas kernels.
 # ---------------------------------------------------------------------------
 
+def matmul_blocking(
+    m: int, n: int, k: int,
+    mem: Optional[MemoryModel] = None,
+    prec=None,
+    align_m: int = 8, align_n: int = 128, align_k: int = 128,
+) -> Blocking:
+    """The full Blocking for C[m,n] += A[m,k]B[k,n] as the degenerate 7NL CNN
+    (N=m, c_I=k, c_O=n) under an arbitrary memory model."""
+    from .conv_model import matmul_as_conv, Precision
+
+    shape = matmul_as_conv(m, n, k, prec or Precision(0.5, 0.5, 1.0))
+    if mem is None:
+        mem = MemoryModel(M=TPU_VMEM_WORDS, mode="unified", double_buffer=True)
+    align = {k_: v for k_, v in
+             (("N", align_m), ("cO", align_n), ("cI", align_k)) if v > 1}
+    return optimize_blocking(shape, mem, align=align or None)
+
+
+def snap_tile(v: int, align: int, dim: int) -> int:
+    """Round a tile down to the alignment multiple (whole dim when it is
+    smaller than one aligned tile)."""
+    if align <= 1:
+        return min(v, dim)
+    if dim < align:
+        return dim
+    v = max(align, (v // align) * align)
+    return min(v, (dim // align) * align if dim % align == 0 else v)
+
+
 def matmul_tiles(
     m: int, n: int, k: int,
     vmem_words: float = TPU_VMEM_WORDS,
     prec=None,
     align_m: int = 8, align_n: int = 128, align_k: int = 128,
+    mem: Optional[MemoryModel] = None,
 ) -> Tuple[int, int, int]:
     """Block sizes (bm, bn, bk) for C[m,n] += A[m,k]B[k,n] from the 7NL LP,
     MXU-aligned. The degenerate conv has N=m, c_I=k, c_O=n."""
-    from .conv_model import matmul_as_conv, Precision
-
-    shape = matmul_as_conv(m, n, k, prec or Precision(0.5, 0.5, 1.0))
-    mem = MemoryModel(M=vmem_words, mode="unified", double_buffer=True)
-    blk = optimize_blocking(shape, mem, align={"N": align_m, "cO": align_n, "cI": align_k})
+    if mem is None:
+        mem = MemoryModel(M=vmem_words, mode="unified", double_buffer=True)
+    blk = matmul_blocking(m, n, k, mem=mem, prec=prec, align_m=align_m,
+                          align_n=align_n, align_k=align_k)
     bm, bk, bn = blk.b["N"], blk.b["cI"], blk.b["cO"]
-
-    def _snap(v: int, a: int, dim: int) -> int:
-        if dim < a:
-            return dim
-        v = max(a, (v // a) * a)
-        return min(v, (dim // a) * a if dim % a == 0 else v)
-
-    return (_snap(bm, align_m, m), _snap(bn, align_n, n), _snap(bk, align_k, k))
+    return (snap_tile(bm, align_m, m), snap_tile(bn, align_n, n),
+            snap_tile(bk, align_k, k))

@@ -1,9 +1,13 @@
 """Pallas TPU kernels for the perf-critical compute hot-spots, tiled by the
-paper's blocking LP. Validated against the pure-jnp oracles in ref.py with
-interpret=True on CPU."""
+``repro.plan`` planner (every kernel accepts ``plan=`` / ``target=``).
+Validated against the pure-jnp oracles in ref.py with interpret=True on CPU.
+
+``plan_conv_tiles`` / ``plan_tiles`` are deprecated shims over
+``repro.plan.plan``; new code should pass an ``ExecutionPlan`` or a
+``HardwareTarget`` instead."""
 
 from . import ops, ref  # noqa: F401
 from .conv1d import conv1d_causal  # noqa: F401
 from .conv2d import conv2d, plan_conv_tiles  # noqa: F401
-from .flash_attention import flash_attention  # noqa: F401
+from .flash_attention import attention_blocks, flash_attention  # noqa: F401
 from .matmul import matmul, plan_tiles  # noqa: F401

@@ -9,13 +9,14 @@ assigned archs, L*b_D*2B <= VMEM for every cell incl. 32k prefill at b_D=128).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.conv_model import round_up
+from repro.plan import HardwareTarget
 
 
 def _conv1d_kernel(x_ref, w_ref, o_ref, *, K: int):
@@ -34,11 +35,18 @@ def conv1d_causal(
     x: jax.Array,  # (B, L, D)
     w: jax.Array,  # (K, D)
     tiles: Tuple[int, int] | None = None,
-    interpret: bool = True,
+    target: Optional[HardwareTarget] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    """``target`` sets the channel-tile lane width and the interpret default;
+    the degenerate LP solution is the closed form in the module docstring."""
     B, L, D = x.shape
     K = w.shape[0]
-    bB, bD = tiles or (max(1, min(B, 8)), max(1, min(D, 128)))
+    lane = target.align_lane if target is not None else 128
+    sublane = target.align_sublane if target is not None else 8
+    bB, bD = tiles or (max(1, min(B, sublane)), max(1, min(D, lane)))
+    if interpret is None:
+        interpret = target.interpret if target is not None else True
     Bp, Dp = round_up(B, bB), round_up(D, bD)
     if (Bp, Dp) != (B, D):
         x = jnp.pad(x, ((0, Bp - B), (0, 0), (0, Dp - D)))

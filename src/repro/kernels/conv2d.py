@@ -29,29 +29,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.conv_model import ConvShape, Precision, ceil_div, round_up
-from repro.core.tiling import MemoryModel, TPU_VMEM_WORDS, optimize_blocking
+from repro.core.conv_model import Precision, ceil_div, round_up
+from repro.core.tiling import TPU_VMEM_WORDS
+from repro.plan import (ConvSpec, ExecutionPlan, HardwareTarget, TPU_V5E,
+                        resolve_kernel_plan)
+from repro.plan import plan as plan_op
 
 
-@functools.lru_cache(maxsize=256)
+def _conv_spec(N: int, c_I: int, c_O: int, h_O: int, w_O: int, h_F: int,
+               w_F: int, sh: int, sw: int, in_bits: int) -> ConvSpec:
+    p_in = in_bits / 32.0
+    return ConvSpec(N=N, c_I=c_I, c_O=c_O, w_O=w_O, h_O=h_O, w_F=w_F, h_F=h_F,
+                    sw=sw, sh=sh, prec=Precision(p_in, p_in, 1.0))
+
+
 def plan_conv_tiles(
     N: int, c_I: int, c_O: int, h_O: int, w_O: int, h_F: int, w_F: int,
     sh: int, sw: int, in_bits: int, vmem_words: int = TPU_VMEM_WORDS,
 ) -> Tuple[int, int, int]:
-    """(bN, b_cI, b_cO) from the paper's LP; spatial kept whole (see module
+    """Deprecated shim over ``repro.plan.plan`` (kept for old call sites).
+
+    (bN, b_cI, b_cO) from the paper's LP; spatial kept whole (see module
     docstring), so the LP sees the full h_O/w_O and its spatial block choice is
-    folded into bN."""
-    p_in = in_bits / 32.0
-    shape = ConvShape(N=N, c_I=c_I, c_O=c_O, w_O=w_O, h_O=h_O, w_F=w_F,
-                      h_F=h_F, sw=sw, sh=sh,
-                      prec=Precision(p_in, p_in, 1.0))
-    mem = MemoryModel(M=vmem_words, mode="unified", double_buffer=True)
-    blk = optimize_blocking(
-        shape, mem, align={"cO": min(128, c_O), "cI": min(8, c_I)})
-    t = blk.as_conv_tile()
-    # fold the LP's spatial tiling into the batch tile (v1 keeps spatial whole):
-    bN = max(1, min(N, t["N"]))
-    return bN, t["cI"], t["cO"]
+    folded into bN. Memoization now lives in the process-wide plan cache."""
+    target = TPU_V5E if vmem_words == TPU_VMEM_WORDS else \
+        TPU_V5E.with_vmem(vmem_words)
+    ep = plan_op(_conv_spec(N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, in_bits),
+                 target)
+    return ep.conv_tiles()
 
 
 def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_ci: int, h_F: int,
@@ -94,9 +99,16 @@ def conv2d(
     stride: Tuple[int, int] = (1, 1),
     out_dtype=jnp.float32,
     tiles: Optional[Tuple[int, int, int]] = None,
-    interpret: bool = True,
+    plan: Optional[ExecutionPlan] = None,
+    target: Optional[HardwareTarget] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Direct convolution with paper-LP tiling. VALID padding."""
+    """Direct convolution with paper-LP tiling. VALID padding.
+
+    Tiles come from (in priority order) an explicit legacy ``tiles`` triple,
+    an ``ExecutionPlan`` (``repro.plan.plan``), or a fresh plan solved for
+    ``target`` (default TPU_V5E). ``interpret`` defaults to the target's
+    policy (True everywhere until a real TPU backend is attached)."""
     N, c_I, H, W = x.shape
     c_O, c_I2, h_F, w_F = w.shape
     assert c_I == c_I2
@@ -104,8 +116,9 @@ def conv2d(
     h_O = (H - h_F) // sh + 1
     w_O = (W - w_F) // sw + 1
     in_bits = jnp.dtype(x.dtype).itemsize * 8
-    bN, b_cI, b_cO = tiles or plan_conv_tiles(
-        N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, in_bits)
+    (bN, b_cI, b_cO), interpret = resolve_kernel_plan(
+        _conv_spec(N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, in_bits),
+        plan=plan, target=target, tiles=tiles, interpret=interpret)
 
     Np, cIp, cOp = round_up(N, bN), round_up(c_I, b_cI), round_up(c_O, b_cO)
     if (Np, cIp) != (N, c_I):

@@ -22,10 +22,30 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.conv_model import round_up
+from repro.plan import HardwareTarget
 
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_K = 512
 NEG_INF = -1e30
+
+
+def attention_blocks(dh: int, target: HardwareTarget,
+                     kv_word: Optional[float] = None) -> tuple[int, int]:
+    """(block_q, block_k) from the target's capacity argument (module
+    docstring): f32 q/acc/stats residents + streamed k/v tiles must fit the
+    double-buffered budget. Largest MXU-saturating power of two <= 512 that
+    fits; the LP degenerates to this closed form because both attention GEMMs
+    share the b_q x b_k footprint term. ``kv_word`` is the stream width of the
+    actual k/v arrays (words of 32 bits); defaults to the target's policy."""
+    m_eff = target.memory_model().M_eff
+    p_kv = target.precision.p_I if kv_word is None else kv_word
+    for b in (512, 256, 128, 64, 32, 16, 8):
+        words = 2.0 * b * dh + 2.0 * b * dh * p_kv + b * b + 2.0 * b
+        if words <= m_eff:
+            return b, b
+    raise ValueError(
+        f"no attention block fits {target.name}: dh={dh} needs more than "
+        f"M_eff={m_eff:.0f} words even at block 8")
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -77,12 +97,23 @@ def flash_attention(
     v: jax.Array,  # (BH, Lk, Dh)
     causal: bool = True,
     q_offset: int = 0,
-    block_q: int = DEFAULT_BLOCK_Q,
-    block_k: int = DEFAULT_BLOCK_K,
-    interpret: bool = True,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
+    target: Optional[HardwareTarget] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     BH, Lq, Dh = q.shape
     Lk = k.shape[1]
+    if block_q is None or block_k is None:
+        if target is not None:
+            kv_word = jnp.dtype(k.dtype).itemsize / 4.0
+            tq, tk = attention_blocks(Dh, target, kv_word=kv_word)
+        else:
+            tq, tk = DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K
+        block_q = block_q if block_q is not None else tq
+        block_k = block_k if block_k is not None else tk
+    if interpret is None:
+        interpret = target.interpret if target is not None else True
     scale = 1.0 / (Dh ** 0.5)
     bq = min(block_q, round_up(Lq, 8))
     bk = min(block_k, round_up(Lk, 8))

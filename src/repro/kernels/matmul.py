@@ -11,7 +11,7 @@ scratchpad/accumulator discipline, with double-buffering halving capacity.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,21 +19,24 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.conv_model import Precision, ceil_div, round_up
-from repro.core.tiling import TPU_VMEM_WORDS, matmul_tiles
+from repro.core.tiling import TPU_VMEM_WORDS
+from repro.plan import (ExecutionPlan, HardwareTarget, MatmulSpec, TPU_V5E,
+                        resolve_kernel_plan)
+from repro.plan import plan as plan_op
 
 
-@functools.lru_cache(maxsize=512)
+def _matmul_spec(m: int, n: int, k: int, in_bits: int) -> MatmulSpec:
+    p_in = in_bits / 32.0
+    return MatmulSpec(m=m, n=n, k=k, prec=Precision(p_in, p_in, 1.0))
+
+
 def plan_tiles(m: int, n: int, k: int, vmem_words: int = TPU_VMEM_WORDS,
                in_bits: int = 16) -> Tuple[int, int, int]:
-    """Cache the LP solve per GEMM shape (runs at trace time only)."""
-    p_in = in_bits / 32.0
-    bm, bn, bk = matmul_tiles(m, n, k, vmem_words=vmem_words,
-                              prec=Precision(p_in, p_in, 1.0))
-    # clamp to the padded problem so BlockSpecs divide evenly
-    bm = min(bm, round_up(m, 8))
-    bn = min(bn, round_up(n, 128))
-    bk = min(bk, round_up(k, 128))
-    return bm, bn, bk
+    """Deprecated shim over ``repro.plan.plan`` (kept for old call sites).
+    The LP solve is memoized in the process-wide plan cache (trace time only)."""
+    target = TPU_V5E if vmem_words == TPU_VMEM_WORDS else \
+        TPU_V5E.with_vmem(vmem_words)
+    return plan_op(_matmul_spec(m, n, k, in_bits), target).matmul_tiles()
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
@@ -59,14 +62,21 @@ def matmul(
     b: jax.Array,  # (k, n)
     out_dtype=jnp.float32,
     tiles: Tuple[int, int, int] | None = None,
-    interpret: bool = True,
+    plan: Optional[ExecutionPlan] = None,
+    target: Optional[HardwareTarget] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """C[m,n] = A @ B with LP-chosen VMEM tiling."""
+    """C[m,n] = A @ B with LP-chosen VMEM tiling.
+
+    Tiles come from (in priority order) an explicit legacy ``tiles`` triple,
+    an ``ExecutionPlan``, or a fresh plan solved for ``target``."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, f"inner dims mismatch: {k} vs {k2}"
     in_bits = jnp.dtype(a.dtype).itemsize * 8
-    bm, bn, bk = tiles or plan_tiles(m, n, k, in_bits=in_bits)
+    (bm, bn, bk), interpret = resolve_kernel_plan(
+        _matmul_spec(m, n, k, in_bits),
+        plan=plan, target=target, tiles=tiles, interpret=interpret)
 
     mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
     if (mp, kp) != (m, k):

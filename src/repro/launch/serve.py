@@ -25,11 +25,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--target", default="cpu_interpret",
+                    help="hardware target preset (tpu_v5e | gemmini | "
+                         "cpu_interpret); decides the kernel path")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
     from repro.configs import get_config, get_smoke
     from repro.models import transformer as T
+    from repro.plan import get_target
     from repro.serving.engine import Engine, Request
     from repro.train import checkpoint as ckpt
 
@@ -49,7 +53,8 @@ def main():
                     max_new_tokens=args.max_new,
                     temperature=args.temperature)
             for _ in range(args.requests)]
-    eng = Engine(cfg, params, max_len=args.max_len, batch_size=args.batch)
+    eng = Engine(cfg, params, max_len=args.max_len, batch_size=args.batch,
+                 target=get_target(args.target))
     t0 = time.time()
     eng.serve(reqs)
     dt = time.time() - t0

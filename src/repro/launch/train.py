@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--mesh", default=None,
                     help="e.g. '2,4' -> (data=2, model=4) over local devices")
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--target", default=None,
+                    help="hardware target preset (tpu_v5e | gemmini | "
+                         "cpu_interpret); implies its kernel path")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--remat", action="store_true")
     args = ap.parse_args()
@@ -45,6 +48,12 @@ def main():
     from repro.data.pipeline import DataConfig
     from repro.train.optimizer import AdamWConfig
     from repro.train.trainer import TrainConfig, Trainer
+
+    use_pallas = args.use_pallas
+    if args.target:
+        from repro.plan import get_target
+
+        use_pallas = use_pallas or get_target(args.target).use_pallas
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     mesh = None
@@ -58,7 +67,7 @@ def main():
                        total_steps=args.steps)
     tcfg = TrainConfig(steps=args.steps, microbatches=args.microbatches,
                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                       remat=args.remat, use_pallas=args.use_pallas,
+                       remat=args.remat, use_pallas=use_pallas,
                        compress_grads=args.compress_grads,
                        n_groups=max(1, np.gcd(args.batch * args.seq,
                                               len(jax.devices()))))

@@ -1,10 +1,13 @@
 """Sharding rules: parameter / activation / cache PartitionSpecs.
 
-The axis binding follows the paper's parallel blocking LP
-(core.sharding_opt.plan_gemm_sharding ranks it): for every GEMM in the stack,
-rows (tokens) -> the data-like axes, columns (features/heads/experts/vocab)
--> the `model` axis; the reduction axis is never sharded in the fwd pass (its
-split is what the LP charges as output-reduction traffic).
+The axis binding follows the paper's parallel blocking LP (the unified
+``repro.plan`` planner emits it — see ``gemm_sharding_plan`` below): for every
+GEMM in the stack, rows (tokens) -> the data-like axes, columns
+(features/heads/experts/vocab) -> the `model` axis; the reduction axis is
+never sharded in the fwd pass (its split is what the LP charges as
+output-reduction traffic). The static rule tables below are that LP solution
+written out for the transformer stack; ``gemm_sharding_plan`` re-derives it
+per-shape when a layer falls outside the tables.
 
 Conventions:
   mesh axes  = ("pod", "data", "model")  (pod optional)
@@ -23,6 +26,27 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .config import ModelConfig
 
 PyTree = Any
+
+
+def mesh_target(mesh: Mesh, base=None):
+    """HardwareTarget whose mesh_axes mirror a jax Mesh — the planner input
+    for every sharding decision in this module."""
+    from repro.plan import HardwareTarget
+
+    return HardwareTarget.from_mesh(mesh, base=base)
+
+
+def gemm_sharding_plan(m: int, n: int, k: int, mesh: Mesh):
+    """LP-derived PartitionSpecs for C[m,n] = A[m,k] B[k,n] on ``mesh``.
+
+    Returns (plan, spec_A, spec_B, spec_C); specs cover the two matrix dims.
+    This is the dynamic path behind the static rule tables below."""
+    from repro.plan import MatmulSpec, plan
+
+    ep = plan(MatmulSpec(m, n, k), mesh_target(mesh))
+    sp = ep.sharding
+    return (ep, P(*sp.input_spec[:2]), P(*sp.filter_spec[:2]),
+            P(*sp.output_spec[:2]))
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:

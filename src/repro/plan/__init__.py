@@ -1,0 +1,45 @@
+"""``repro.plan`` — the single planning subsystem (HardwareTarget -> ExecutionPlan).
+
+The paper's optimization discipline — solve the HBL-derived blocking LP
+against a memory-hierarchy model, then lower the solution to tilings and
+processor grids (§3.2 eq. 6, §4.2, §5) — behind one API:
+
+    from repro.plan import ConvSpec, HardwareTarget, TPU_V5E, plan
+
+    ep = plan(ConvSpec(N=32, c_I=64, c_O=64, w_O=56, h_O=56, w_F=3, h_F=3),
+              TPU_V5E)
+    ep.tiles          # (bN, b_cI, b_cO) for the Pallas kernel
+    ep.comm_volume    # modeled HBM<->VMEM words
+    ep.efficiency     # vs the Thm 2.1 lower bound
+    ep.sharding       # PartitionSpecs when the target has mesh axes
+
+Every kernel (`kernels.conv2d`, `kernels.matmul`, ...) accepts ``plan=`` /
+``target=``; the legacy per-module planners (`plan_conv_tiles`,
+`plan_tiles`, direct `optimize_blocking` calls, ...) remain as thin shims
+over this module.
+"""
+
+from .ops import (  # noqa: F401
+    ConvSpec,
+    MatmulSpec,
+    OpSpec,
+    as_op_spec,
+)
+from .planner import (  # noqa: F401
+    PLAN_FORMAT_VERSION,
+    ExecutionPlan,
+    clear_plan_cache,
+    load_plan_cache,
+    plan,
+    plan_cache_size,
+    resolve_kernel_plan,
+    save_plan_cache,
+)
+from .target import (  # noqa: F401
+    CPU_INTERPRET,
+    GEMMINI,
+    TARGETS,
+    TPU_V5E,
+    HardwareTarget,
+    get_target,
+)

@@ -1,0 +1,332 @@
+"""The single planning entry point: ``plan(op, target) -> ExecutionPlan``.
+
+One discipline for the whole codebase (paper §3.2 eq. 6, §4.2, §5): solve the
+HBL-derived blocking LP against the target's memory-hierarchy model, refine to
+integers, then lower the solution to (a) Pallas tile/grid shapes and (b) — for
+multi-device targets — a mesh ``ShardingPlan`` with PartitionSpecs.
+
+Plans are memoized process-wide, keyed on the (op, target) value pair; this
+replaces the per-kernel ``functools.lru_cache``s the planners used to carry.
+The cache can be dumped to / restored from JSON for offline plan reuse
+(``save_plan_cache`` / ``load_plan_cache``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.core.bounds import single_processor_bound
+from repro.core.conv_model import ConvShape, Precision, ceil_div, round_up
+from repro.core.sharding_opt import ShardingPlan, plan_conv_sharding
+from repro.core.tiling import (Blocking, matmul_blocking, optimize_blocking,
+                               snap_tile)
+
+from .ops import ConvSpec, MatmulSpec, OpSpec, as_op_spec, op_from_dict
+from .target import HardwareTarget, TPU_V5E
+
+PLAN_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything a consumer needs to execute one op on one target.
+
+    ``tiles`` is the kernel-facing triple — (bN, b_cI, b_cO) for conv,
+    (bm, bn, bk) for matmul — and ``blocking`` the full 9-axis integer LP
+    solution it was collapsed from. ``grid`` is the Pallas launch grid over
+    the padded problem. ``sharding`` is present iff the target has mesh axes.
+    """
+
+    op: OpSpec
+    target: HardwareTarget
+    blocking: Tuple[Tuple[str, int], ...]  # sorted (axis, block) pairs
+    tiles: Tuple[int, ...]
+    grid: Tuple[int, ...]
+    comm_volume: float  # modeled slow<->fast words moved
+    lower_bound: float  # Thm 2.1 bound at the target's effective capacity
+    efficiency: float  # comm_volume / lower_bound
+    sharding: Optional[ShardingPlan] = None
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def blocking_dict(self) -> Dict[str, int]:
+        return dict(self.blocking)
+
+    @property
+    def precision(self) -> Precision:
+        return self.op.prec or self.target.precision
+
+    def to_shape(self) -> ConvShape:
+        return self.op.to_shape(self.target.precision)
+
+    def as_blocking(self) -> Blocking:
+        return Blocking(self.blocking_dict, self.to_shape())
+
+    def conv_tiles(self) -> Tuple[int, int, int]:
+        if not isinstance(self.op, ConvSpec):
+            raise TypeError("conv_tiles() on a non-conv plan")
+        return self.tiles  # (bN, b_cI, b_cO)
+
+    def matmul_tiles(self) -> Tuple[int, int, int]:
+        if not isinstance(self.op, MatmulSpec):
+            raise TypeError("matmul_tiles() on a non-matmul plan")
+        return self.tiles  # (bm, bn, bk)
+
+    def conv_tile(self) -> Dict[str, int]:
+        """The collapsed per-axis conv tile (as_conv_tile view)."""
+        return self.as_blocking().as_conv_tile()
+
+    def footprints(self) -> Dict[str, float]:
+        """Words each array block occupies in fast memory (split-buffer
+        accounting: input+filter -> scratchpad, output -> accumulator)."""
+        blk = self.as_blocking()
+        return {"input": blk.in_block_words, "filter": blk.filt_block_words,
+                "output": blk.out_block_words}
+
+    def pallas_specs(self, input_hw: Optional[Tuple[int, int]] = None):
+        """(grid, in_specs, out_specs) mirroring what the kernels lower.
+        Lazy pallas import so plan inspection works without a jax runtime.
+
+        For conv, the input block's spatial extent depends on the actual
+        array: pass ``input_hw=(H, W)`` to match a concrete call; the default
+        is the minimal VALID extent ``s*(o-1)+f``, which is smaller than the
+        kernel's block whenever the input carries unused trailing rows/cols."""
+        from jax.experimental import pallas as pl
+
+        if isinstance(self.op, MatmulSpec):
+            bm, bn, bk = self.tiles
+            return (self.grid,
+                    [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                     pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+                    pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        op = self.op
+        bN, b_cI, b_cO = self.tiles
+        H, W = input_hw if input_hw is not None else (
+            op.sh * (op.h_O - 1) + op.h_F, op.sw * (op.w_O - 1) + op.w_F)
+        return (self.grid,
+                [pl.BlockSpec((bN, b_cI, H, W), lambda n, co, ci: (n, ci, 0, 0)),
+                 pl.BlockSpec((b_cO, b_cI, op.h_F, op.w_F),
+                              lambda n, co, ci: (co, ci, 0, 0))],
+                pl.BlockSpec((bN, b_cO, op.h_O, op.w_O),
+                             lambda n, co, ci: (n, co, 0, 0)))
+
+    # -- (de)serialization ----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "version": PLAN_FORMAT_VERSION,
+            "op": self.op.to_dict(),
+            "target": self.target.to_dict(),
+            "blocking": [list(kv) for kv in self.blocking],
+            "tiles": list(self.tiles),
+            "grid": list(self.grid),
+            "comm_volume": self.comm_volume,
+            "lower_bound": self.lower_bound,
+            "efficiency": self.efficiency,
+            "sharding": None,
+        }
+        if self.sharding is not None:
+            s = self.sharding
+            d["sharding"] = {
+                "binding": dict(s.binding),
+                "mesh_axes": [list(ax) for ax in s.mesh_axes],
+                "comm_per_processor": s.comm_per_processor,
+                "grid": dict(s.grid),
+            }
+        return d
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExecutionPlan":
+        if d.get("version", 1) > PLAN_FORMAT_VERSION:
+            raise ValueError(f"plan format {d['version']} is newer than "
+                             f"supported {PLAN_FORMAT_VERSION}")
+        sharding = None
+        if d.get("sharding") is not None:
+            s = d["sharding"]
+            sharding = ShardingPlan(
+                binding=dict(s["binding"]),
+                mesh_axes=tuple((str(n), int(sz)) for n, sz in s["mesh_axes"]),
+                comm_per_processor=float(s["comm_per_processor"]),
+                grid={k: int(v) for k, v in s["grid"].items()},
+            )
+        return cls(
+            op=op_from_dict(d["op"]),
+            target=HardwareTarget.from_dict(d["target"]),
+            blocking=tuple((str(k), int(v)) for k, v in d["blocking"]),
+            tiles=tuple(int(v) for v in d["tiles"]),
+            grid=tuple(int(v) for v in d["grid"]),
+            comm_volume=float(d["comm_volume"]),
+            lower_bound=float(d["lower_bound"]),
+            efficiency=float(d["efficiency"]),
+            sharding=sharding,
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionPlan":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# The process-wide plan cache (one memoizer for every consumer).
+# ---------------------------------------------------------------------------
+
+_CACHE: Dict[Tuple[OpSpec, HardwareTarget], ExecutionPlan] = {}
+_CACHE_LOCK = threading.Lock()
+# Bounded like the per-kernel lru_caches it replaces (256 + 512): long-running
+# servers planning many distinct shapes must not grow memory without limit.
+PLAN_CACHE_MAX = 1024
+
+
+def clear_plan_cache() -> None:
+    with _CACHE_LOCK:
+        _CACHE.clear()
+
+
+def plan_cache_size() -> int:
+    return len(_CACHE)
+
+
+def save_plan_cache(path: str) -> int:
+    """Dump every cached plan as a JSON list; returns the count written."""
+    with _CACHE_LOCK:
+        plans = list(_CACHE.values())
+    with open(path, "w") as f:
+        json.dump([p.to_dict() for p in plans], f, indent=1)
+    return len(plans)
+
+
+def load_plan_cache(path: str) -> int:
+    """Pre-populate the cache from a JSON dump; returns the count loaded."""
+    with open(path) as f:
+        entries = json.load(f)
+    n = 0
+    with _CACHE_LOCK:
+        for d in entries:
+            p = ExecutionPlan.from_dict(d)
+            _CACHE.setdefault((p.op, p.target), p)
+            n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Lowering: OpSpec x HardwareTarget -> ExecutionPlan.
+# ---------------------------------------------------------------------------
+
+def _conv_align(shape: ConvShape, target: HardwareTarget) -> Optional[Dict[str, int]]:
+    align: Dict[str, int] = {}
+    if target.align_lane > 1:
+        align["cO"] = min(target.align_lane, shape.c_O)
+    if target.align_sublane > 1:
+        align["cI"] = min(target.align_sublane, shape.c_I)
+    return align or None
+
+
+def _plan_conv(op: ConvSpec, target: HardwareTarget) -> ExecutionPlan:
+    shape = op.to_shape(target.precision)
+    mem = target.memory_model()
+    blk = optimize_blocking(shape, mem, align=_conv_align(shape, target))
+    t = blk.as_conv_tile()
+    # v1 kernels keep spatial whole: the LP's spatial choice folds into bN
+    # (see kernels/conv2d.py module docstring).
+    tiles = (max(1, min(op.N, t["N"])), t["cI"], t["cO"])
+    grid = (ceil_div(op.N, tiles[0]), ceil_div(op.c_O, tiles[2]),
+            ceil_div(op.c_I, tiles[1]))
+    vol = blk.comm_volume()
+    lb = single_processor_bound(shape, mem.M_eff).value
+    sharding = (plan_conv_sharding(shape, target.mesh_axes)
+                if target.mesh_axes else None)
+    return ExecutionPlan(
+        op=op, target=target, blocking=tuple(sorted(blk.b.items())),
+        tiles=tiles, grid=grid, comm_volume=vol, lower_bound=lb,
+        efficiency=vol / max(lb, 1.0), sharding=sharding)
+
+
+def _plan_matmul(op: MatmulSpec, target: HardwareTarget) -> ExecutionPlan:
+    prec = op.prec or target.precision
+    mem = target.memory_model()
+    blk = matmul_blocking(op.m, op.n, op.k, mem=mem, prec=prec,
+                          align_m=target.align_sublane,
+                          align_n=target.align_lane,
+                          align_k=target.align_lane)
+    bm, bk, bn = blk.b["N"], blk.b["cI"], blk.b["cO"]
+    bm = snap_tile(bm, target.align_sublane, op.m)
+    bn = snap_tile(bn, target.align_lane, op.n)
+    bk = snap_tile(bk, target.align_lane, op.k)
+    # clamp so the BlockSpecs divide the padded problem evenly
+    bm = min(bm, round_up(op.m, max(target.align_sublane, 1)))
+    bn = min(bn, round_up(op.n, max(target.align_lane, 1)))
+    bk = min(bk, round_up(op.k, max(target.align_lane, 1)))
+    tiles = (bm, bn, bk)
+    grid = (ceil_div(op.m, bm), ceil_div(op.n, bn), ceil_div(op.k, bk))
+    shape = op.to_shape(target.precision)
+    vol = blk.comm_volume()
+    lb = single_processor_bound(shape, mem.M_eff).value
+    sharding = None
+    if target.mesh_axes:
+        sharding = plan_conv_sharding(shape, target.mesh_axes,
+                                      shardable=("N", "cI", "cO"))
+    return ExecutionPlan(
+        op=op, target=target, blocking=tuple(sorted(blk.b.items())),
+        tiles=tiles, grid=grid, comm_volume=vol, lower_bound=lb,
+        efficiency=vol / max(lb, 1.0), sharding=sharding)
+
+
+def resolve_kernel_plan(
+    op: OpSpec,
+    plan: Optional[ExecutionPlan] = None,
+    target: Optional[HardwareTarget] = None,
+    tiles: Optional[Tuple[int, ...]] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[Tuple[int, ...], bool]:
+    """Shared kernel-side resolution of (tiles, interpret).
+
+    ``op`` is the spec the kernel built from its actual arrays (precision
+    included). Priority: explicit legacy ``tiles``, then a caller-supplied
+    ``plan`` (validated for geometry and precision), then a fresh plan for
+    ``target``. One implementation so conv2d/matmul/... cannot diverge."""
+    if tiles is None and plan is None:
+        # the parameter shadows the module-level entry point
+        plan = globals()["plan"](op, target or TPU_V5E)
+    if plan is not None:
+        if not isinstance(plan.op, type(op)) or (
+                dataclasses.replace(plan.op, prec=None)
+                != dataclasses.replace(op, prec=None)):
+            raise ValueError(f"plan was made for {plan.op}, not {op}")
+        data_p = (op.prec or plan.target.precision).p_I
+        if plan.precision.p_I < data_p:
+            raise ValueError(
+                f"plan assumed {plan.precision.p_I}-word input streams but "
+                f"the data is {data_p} words: its tiles would overflow the "
+                "modeled fast-memory budget")
+    if interpret is None:
+        if plan is not None:
+            interpret = plan.target.interpret
+        else:
+            interpret = target.interpret if target is not None else True
+    return (tiles if tiles is not None else plan.tiles), interpret
+
+
+def plan(op: Union[OpSpec, ConvShape], target: HardwareTarget = TPU_V5E
+         ) -> ExecutionPlan:
+    """Plan one op for one target. Memoized: repeated calls with an equal
+    (op, target) pair return the identical ExecutionPlan object."""
+    op = as_op_spec(op)
+    key = (op, target)
+    with _CACHE_LOCK:
+        cached = _CACHE.get(key)
+    if cached is not None:
+        return cached
+    if isinstance(op, ConvSpec):
+        built = _plan_conv(op, target)
+    else:
+        built = _plan_matmul(op, target)
+    with _CACHE_LOCK:
+        while len(_CACHE) >= PLAN_CACHE_MAX:
+            _CACHE.pop(next(iter(_CACHE)))  # FIFO eviction of the oldest plan
+        # first writer wins so concurrent planners still converge on one object
+        return _CACHE.setdefault(key, built)

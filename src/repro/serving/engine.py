@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.plan import CPU_INTERPRET, HardwareTarget
 
 PyTree = Any
 
@@ -53,19 +54,30 @@ def make_decode_step(cfg: ModelConfig, use_pallas: bool = False):
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params: PyTree, max_len: int = 512,
-                 batch_size: int = 4, use_pallas: bool = False, seed: int = 0):
+                 batch_size: int = 4, use_pallas: Optional[bool] = None,
+                 seed: int = 0, target: Optional[HardwareTarget] = None):
         assert cfg.causal, "serving requires a decoder model"
         self.cfg, self.params = cfg, params
         self.max_len, self.batch_size = max_len, batch_size
+        self.target = target or CPU_INTERPRET
+        if use_pallas is None:
+            use_pallas = self.target.use_pallas
         self.prefill_step = make_prefill_step(cfg, use_pallas)
         self.decode_step = make_decode_step(cfg, use_pallas)
         self.key = jax.random.PRNGKey(seed)
 
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
+    def _sample_wave(self, logits: jax.Array, temps: np.ndarray) -> jax.Array:
+        """Per-request sampling: row i uses wave[i].temperature, greedy rows
+        (temperature 0) take the argmax — mixing greedy and sampling requests
+        in one wave must not randomize the greedy ones."""
+        greedy = jnp.argmax(logits, axis=-1)
+        hot = temps > 0.0
+        if not hot.any():
+            return greedy
         self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
+        safe_t = jnp.asarray(np.where(hot, temps, 1.0), logits.dtype)
+        sampled = jax.random.categorical(sub, logits / safe_t[:, None], axis=-1)
+        return jnp.where(jnp.asarray(hot), sampled, greedy)
 
     def _run_wave(self, wave: List[Request]) -> None:
         B = len(wave)
@@ -77,9 +89,9 @@ class Engine:
         logits, cache = self.prefill_step(self.params, cache,
                                           jnp.asarray(prompts))
         max_new = max(r.max_new_tokens for r in wave)
-        temperature = max(r.temperature for r in wave)
+        temps = np.array([r.temperature for r in wave], np.float32)
         out = np.zeros((B, max_new), np.int32)
-        tok = self._sample(logits, temperature)
+        tok = self._sample_wave(logits, temps)
         index = jnp.asarray(Lp, jnp.int32)
         for t in range(max_new):
             out[:, t] = np.asarray(tok)
@@ -87,7 +99,7 @@ class Engine:
                 break
             logits, cache = self.decode_step(self.params, cache,
                                              tok[:, None], index)
-            tok = self._sample(logits, temperature)
+            tok = self._sample_wave(logits, temps)
             index = index + 1
         for i, r in enumerate(wave):
             r.out_tokens = out[i, :r.max_new_tokens]

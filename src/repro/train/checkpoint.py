@@ -34,7 +34,8 @@ PyTree = Any
 
 
 def _flatten_with_paths(tree: PyTree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in newer jax; use tree_util
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
             for path, _ in flat]
     leaves = [leaf for _, leaf in flat]

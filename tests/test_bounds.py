@@ -3,7 +3,9 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.bounds import (C_p, combined_parallel_bound, matmul_bound,
                                memory_independent_parallel_bound,

@@ -7,7 +7,10 @@ hand-derived special cases."""
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.bounds import single_processor_bound
 from repro.core.conv_model import ConvShape

@@ -1,0 +1,175 @@
+"""Tests for the unified ``repro.plan`` subsystem: cache identity, JSON
+round-trips, kernel parity between ExecutionPlan and legacy tiles, and the
+GEMMINI split-buffer footprint discipline."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.conv_model import INT8_ACC32, Precision, resnet50_layers
+from repro.kernels.conv2d import conv2d, plan_conv_tiles
+from repro.kernels.matmul import matmul, plan_tiles
+from repro.kernels.ref import conv2d_ref, matmul_ref
+from repro.plan import (CPU_INTERPRET, GEMMINI, TPU_V5E, ConvSpec,
+                        ExecutionPlan, HardwareTarget, MatmulSpec, get_target,
+                        load_plan_cache, plan, save_plan_cache)
+
+KEY = jax.random.PRNGKey(0)
+K2 = jax.random.PRNGKey(1)
+
+CONV = ConvSpec(N=4, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3)
+GEMM = MatmulSpec(256, 512, 128, prec=Precision(0.5, 0.5, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_returns_identical_object():
+    assert plan(CONV, TPU_V5E) is plan(CONV, TPU_V5E)
+    assert plan(GEMM, TPU_V5E) is plan(GEMM, TPU_V5E)
+    # equal-by-value keys hit the same entry even via fresh objects
+    assert plan(dataclasses.replace(CONV), TPU_V5E) is plan(CONV, TPU_V5E)
+    # a different target is a different plan
+    assert plan(CONV, CPU_INTERPRET) is not plan(CONV, TPU_V5E)
+
+
+def test_target_presets_and_registry():
+    assert get_target("tpu_v5e") is TPU_V5E
+    assert get_target("gemmini").memory == "split"
+    with pytest.raises(KeyError):
+        get_target("abacus")
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip + offline reuse
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op,target", [
+    (CONV, TPU_V5E),
+    (GEMM, TPU_V5E),
+    (ConvSpec.from_shape(resnet50_layers(64)["conv3_x"]), GEMMINI),
+    (MatmulSpec(4096, 2048, 512), TPU_V5E.with_mesh((("data", 4), ("model", 2)))),
+])
+def test_plan_json_roundtrip(op, target):
+    ep = plan(op, target)
+    back = ExecutionPlan.from_json(ep.to_json())
+    assert back == ep
+    assert back.op == op and back.target == target
+    assert back.tiles == ep.tiles and back.grid == ep.grid
+    if target.mesh_axes:
+        assert back.sharding == ep.sharding
+        assert back.sharding.output_spec == ep.sharding.output_spec
+
+
+def test_plan_cache_dump_load(tmp_path):
+    ep = plan(CONV, TPU_V5E)
+    path = str(tmp_path / "plans.json")
+    assert save_plan_cache(path) >= 1
+    n = load_plan_cache(path)
+    assert n >= 1
+    # the loaded entries are equal-by-value to the live ones
+    assert plan(CONV, TPU_V5E) == ep
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: ExecutionPlan vs legacy tiles argument
+# ---------------------------------------------------------------------------
+
+def test_conv2d_plan_matches_legacy_tiles():
+    x = jax.random.normal(KEY, (2, 8, 12, 12), jnp.float32)
+    w = jax.random.normal(K2, (16, 8, 3, 3), jnp.float32)
+    spec = ConvSpec(N=2, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3,
+                    prec=Precision(1.0, 1.0, 1.0))
+    ep = plan(spec, TPU_V5E)
+    got_plan = conv2d(x, w, plan=ep)
+    got_tiles = conv2d(x, w, tiles=ep.conv_tiles())
+    got_default = conv2d(x, w)  # plans internally through the same cache
+    np.testing.assert_array_equal(np.asarray(got_plan), np.asarray(got_tiles))
+    np.testing.assert_array_equal(np.asarray(got_plan), np.asarray(got_default))
+    np.testing.assert_allclose(np.asarray(got_plan),
+                               np.asarray(conv2d_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_plan_matches_legacy_tiles():
+    a = jax.random.normal(KEY, (100, 77), jnp.float32)
+    b = jax.random.normal(K2, (77, 130), jnp.float32)
+    ep = plan(MatmulSpec(100, 130, 77, prec=Precision(1.0, 1.0, 1.0)), TPU_V5E)
+    got_plan = matmul(a, b, plan=ep)
+    got_tiles = matmul(a, b, tiles=ep.matmul_tiles())
+    np.testing.assert_array_equal(np.asarray(got_plan), np.asarray(got_tiles))
+    np.testing.assert_allclose(np.asarray(got_plan),
+                               np.asarray(matmul_ref(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_rejects_mismatched_plan():
+    x = jax.random.normal(KEY, (2, 8, 12, 12), jnp.float32)
+    w = jax.random.normal(K2, (16, 8, 3, 3), jnp.float32)
+    wrong = plan(ConvSpec(N=4, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3),
+                 TPU_V5E)
+    with pytest.raises(ValueError):
+        conv2d(x, w, plan=wrong)
+    a = jax.random.normal(KEY, (64, 32), jnp.float32)
+    b = jax.random.normal(K2, (32, 48), jnp.float32)
+    with pytest.raises(ValueError):
+        matmul(a, b, plan=plan(MatmulSpec(65, 48, 32), TPU_V5E))
+    # a plan solved for narrower input streams than the data must be rejected
+    bf16_plan = plan(MatmulSpec(64, 48, 32, prec=Precision(0.5, 0.5, 1.0)),
+                     TPU_V5E)
+    with pytest.raises(ValueError, match="word input streams"):
+        matmul(a, b, plan=bf16_plan)
+
+
+def test_legacy_shims_still_work():
+    bN, bcI, bcO = plan_conv_tiles(64, 64, 256, 56, 56, 3, 3, 1, 1, 16)
+    assert bN >= 1 and bcI >= 1 and bcO >= 1
+    bm, bn, bk = plan_tiles(512, 512, 512)
+    assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0
+
+
+# ---------------------------------------------------------------------------
+# GEMMINI split-buffer discipline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lname", ["conv2_x", "conv4_x"])
+def test_gemmini_plans_respect_macc_footprint(lname):
+    s = resnet50_layers(1000)[lname].with_precision(INT8_ACC32)
+    ep = plan(ConvSpec.from_shape(s), GEMMINI)
+    mem = GEMMINI.memory_model()
+    fp = ep.footprints()
+    assert fp["input"] + fp["filter"] <= mem.M_eff
+    assert fp["output"] <= mem.M_acc_eff
+    assert ep.efficiency < 8.0  # stays near the Thm 2.1 bound (paper Fig 4)
+
+
+# ---------------------------------------------------------------------------
+# mesh targets -> sharding plans
+# ---------------------------------------------------------------------------
+
+def test_mesh_target_attaches_sharding_plan():
+    target = TPU_V5E.with_mesh((("data", 16), ("model", 16)))
+    ep = plan(MatmulSpec(65536, 11008, 2048), target)
+    assert ep.sharding is not None
+    assert ep.sharding.binding.get("N") == "data"
+    assert ep.sharding.binding.get("cO") == "model"
+    # single-device plans carry no sharding
+    assert plan(GEMM, TPU_V5E).sharding is None
+
+
+def test_hardware_target_from_dict_roundtrip():
+    t = HardwareTarget.from_dict(GEMMINI.to_dict())
+    assert t == GEMMINI
+
+
+def test_plan_pallas_specs_shapes():
+    ep = plan(GEMM, TPU_V5E)
+    grid, in_specs, out_spec = ep.pallas_specs()
+    assert grid == ep.grid and len(in_specs) == 2
+    bm, bn, bk = ep.tiles
+    assert in_specs[0].block_shape == (bm, bk)
+    assert out_spec.block_shape == (bm, bn)

@@ -73,3 +73,19 @@ def test_batched_left_padding_preserves_per_request_output():
             Request(prompt=p2, max_new_tokens=4)]
     Engine(cfg, params, max_len=32, batch_size=2).serve(pair)
     np.testing.assert_array_equal(solo.out_tokens, pair[0].out_tokens)
+
+
+def test_greedy_unaffected_by_sampling_batchmate():
+    """Per-request temperatures: a greedy request batched with a temperature>0
+    request must still produce its deterministic greedy output."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    p1 = np.array([3, 1, 4, 1, 5], np.int32)
+    p2 = np.array([2, 7, 1], np.int32)
+
+    solo = Request(prompt=p1, max_new_tokens=5, temperature=0.0)
+    Engine(cfg, params, max_len=32, batch_size=1).serve([solo])
+
+    mixed = [Request(prompt=p1, max_new_tokens=5, temperature=0.0),
+             Request(prompt=p2, max_new_tokens=5, temperature=1.0)]
+    Engine(cfg, params, max_len=32, batch_size=2).serve(mixed)
+    np.testing.assert_array_equal(solo.out_tokens, mixed[0].out_tokens)

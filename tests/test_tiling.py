@@ -4,7 +4,9 @@ regime, parallel grids, and the sharding planner."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.bounds import combined_parallel_bound, single_processor_bound
 from repro.core.conv_model import (BF16_ACC32, INT8_ACC32, ConvShape,
