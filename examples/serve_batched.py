@@ -1,6 +1,7 @@
 """Batched serving demo: a reduced qwen2.5 decoder, a queue of requests with
-ragged prompt lengths, wave-based continuous batching, greedy + sampled
-decode.
+ragged prompt lengths and heterogeneous output budgets, slot-based
+continuous batching (freed slots are refilled mid-flight), greedy + sampled
+decode with per-request sampling streams.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -26,19 +27,21 @@ def main():
         requests.append(Request(
             prompt=rng.integers(0, cfg.vocab_size, size=plen, dtype=np.int64)
             .astype(np.int32),
-            max_new_tokens=16,
-            temperature=0.0 if i % 2 == 0 else 0.8))
+            max_new_tokens=4 if i % 3 == 0 else 16,  # mixed output budgets
+            temperature=0.0 if i % 2 == 0 else 0.8,
+            rng_seed=i))  # fixed stream: same output in any batch mix
 
     eng = Engine(cfg, params, max_len=64, batch_size=4)
     t0 = time.time()
     eng.serve(requests)
     dt = time.time() - t0
-    new_tokens = sum(len(r.out_tokens) for r in requests)
+    new_tokens = sum(len(r.out_tokens) for r in requests)  # real tokens only
     print(f"served {len(requests)} requests ({new_tokens} new tokens) "
           f"in {dt:.2f}s -> {new_tokens / dt:.1f} tok/s on CPU")
     for i, r in enumerate(requests):
         mode = "greedy" if i % 2 == 0 else "t=0.8 "
-        print(f"  [{mode}] prompt({len(r.prompt)}) -> {r.out_tokens.tolist()}")
+        print(f"  [{mode}] prompt({len(r.prompt)}) -> {r.out_tokens.tolist()} "
+              f"({r.finish_reason})")
 
 
 if __name__ == "__main__":

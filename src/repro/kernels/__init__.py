@@ -1,13 +1,12 @@
 """Pallas TPU kernels for the perf-critical compute hot-spots, tiled by the
-``repro.plan`` planner (every kernel accepts ``plan=`` / ``target=``).
-Validated against the pure-jnp oracles in ref.py with interpret=True on CPU.
-
-``plan_conv_tiles`` / ``plan_tiles`` are deprecated shims over
-``repro.plan.plan``; new code should pass an ``ExecutionPlan`` or a
-``HardwareTarget`` instead."""
+``repro.plan`` planner. Every kernel accepts ``plan=`` (an ``ExecutionPlan``
+from ``repro.plan.plan``) or ``target=`` (a ``HardwareTarget``); the
+pre-redesign per-module planners (``plan_conv_tiles``, ``plan_tiles``) are
+retired. Validated against the pure-jnp oracles in ref.py with
+interpret=True on CPU."""
 
 from . import ops, ref  # noqa: F401
 from .conv1d import conv1d_causal  # noqa: F401
-from .conv2d import conv2d, plan_conv_tiles  # noqa: F401
+from .conv2d import conv2d  # noqa: F401
 from .flash_attention import attention_blocks, flash_attention  # noqa: F401
-from .matmul import matmul, plan_tiles  # noqa: F401
+from .matmul import matmul  # noqa: F401

@@ -29,11 +29,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.conv_model import Precision, ceil_div, round_up
-from repro.core.tiling import TPU_VMEM_WORDS
-from repro.plan import (ConvSpec, ExecutionPlan, HardwareTarget, TPU_V5E,
+from repro.core.conv_model import Precision, round_up
+from repro.plan import (ConvSpec, ExecutionPlan, HardwareTarget,
                         resolve_kernel_plan)
-from repro.plan import plan as plan_op
 
 
 def _conv_spec(N: int, c_I: int, c_O: int, h_O: int, w_O: int, h_F: int,
@@ -41,22 +39,6 @@ def _conv_spec(N: int, c_I: int, c_O: int, h_O: int, w_O: int, h_F: int,
     p_in = in_bits / 32.0
     return ConvSpec(N=N, c_I=c_I, c_O=c_O, w_O=w_O, h_O=h_O, w_F=w_F, h_F=h_F,
                     sw=sw, sh=sh, prec=Precision(p_in, p_in, 1.0))
-
-
-def plan_conv_tiles(
-    N: int, c_I: int, c_O: int, h_O: int, w_O: int, h_F: int, w_F: int,
-    sh: int, sw: int, in_bits: int, vmem_words: int = TPU_VMEM_WORDS,
-) -> Tuple[int, int, int]:
-    """Deprecated shim over ``repro.plan.plan`` (kept for old call sites).
-
-    (bN, b_cI, b_cO) from the paper's LP; spatial kept whole (see module
-    docstring), so the LP sees the full h_O/w_O and its spatial block choice is
-    folded into bN. Memoization now lives in the process-wide plan cache."""
-    target = TPU_V5E if vmem_words == TPU_VMEM_WORDS else \
-        TPU_V5E.with_vmem(vmem_words)
-    ep = plan_op(_conv_spec(N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, in_bits),
-                 target)
-    return ep.conv_tiles()
 
 
 def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_ci: int, h_F: int,

@@ -18,25 +18,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.conv_model import Precision, ceil_div, round_up
-from repro.core.tiling import TPU_VMEM_WORDS
-from repro.plan import (ExecutionPlan, HardwareTarget, MatmulSpec, TPU_V5E,
+from repro.core.conv_model import Precision, round_up
+from repro.plan import (ExecutionPlan, HardwareTarget, MatmulSpec,
                         resolve_kernel_plan)
-from repro.plan import plan as plan_op
 
 
 def _matmul_spec(m: int, n: int, k: int, in_bits: int) -> MatmulSpec:
     p_in = in_bits / 32.0
     return MatmulSpec(m=m, n=n, k=k, prec=Precision(p_in, p_in, 1.0))
-
-
-def plan_tiles(m: int, n: int, k: int, vmem_words: int = TPU_VMEM_WORDS,
-               in_bits: int = 16) -> Tuple[int, int, int]:
-    """Deprecated shim over ``repro.plan.plan`` (kept for old call sites).
-    The LP solve is memoized in the process-wide plan cache (trace time only)."""
-    target = TPU_V5E if vmem_words == TPU_VMEM_WORDS else \
-        TPU_V5E.with_vmem(vmem_words)
-    return plan_op(_matmul_spec(m, n, k, in_bits), target).matmul_tiles()
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):

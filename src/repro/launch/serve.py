@@ -1,12 +1,21 @@
-"""Serving launcher: batched decode against a (smoke or checkpointed) model.
+"""Serving launcher: continuous-batching decode against a (smoke or
+checkpointed) model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_3b --smoke \
         --requests 8 --prompt-len 16 --max-new 32
+
+``--engine wave`` runs the wave-lockstep baseline scheduler instead (same
+primitives, admission barriers until the whole batch drains) for A/B
+comparison. ``--batch 0`` sizes the slot pool from the hardware target's
+memory model. Reported tok/s counts only tokens that were actually
+generated (EOS / cache-limit truncation shortens ``out_tokens``; nothing is
+zero-padded).
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import logging
 import time
 
@@ -22,9 +31,14 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="slot-pool size; 0 = plan from the hardware target")
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--stop-token", type=int, default=None,
+                    help="token id that ends a request (EOS)")
+    ap.add_argument("--engine", choices=("slot", "wave"), default="slot",
+                    help="continuous batching (slot) or the wave baseline")
     ap.add_argument("--target", default="cpu_interpret",
                     help="hardware target preset (tpu_v5e | gemmini | "
                          "cpu_interpret); decides the kernel path")
@@ -34,7 +48,7 @@ def main():
     from repro.configs import get_config, get_smoke
     from repro.models import transformer as T
     from repro.plan import get_target
-    from repro.serving.engine import Engine, Request
+    from repro.serving.engine import Engine, Request, WaveEngine
     from repro.train import checkpoint as ckpt
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -47,23 +61,29 @@ def main():
         params = restored["params"]
 
     rng = np.random.default_rng(0)
+    stop = () if args.stop_token is None else (args.stop_token,)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=rng.integers(2, args.prompt_len + 1),
                                         dtype=np.int32).astype(np.int32),
                     max_new_tokens=args.max_new,
-                    temperature=args.temperature)
+                    temperature=args.temperature,
+                    stop_tokens=stop)
             for _ in range(args.requests)]
-    eng = Engine(cfg, params, max_len=args.max_len, batch_size=args.batch,
-                 target=get_target(args.target))
+    cls = WaveEngine if args.engine == "wave" else Engine
+    eng = cls(cfg, params, max_len=args.max_len,
+              batch_size=args.batch or None,
+              target=get_target(args.target))
     t0 = time.time()
     eng.serve(reqs)
     dt = time.time() - t0
-    total_new = sum(len(r.out_tokens) for r in reqs)
-    print(f"served {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s)")
+    total_new = sum(len(r.out_tokens) for r in reqs)  # real tokens only
+    reasons = collections.Counter(r.finish_reason for r in reqs)
+    print(f"[{args.engine}] served {len(reqs)} requests "
+          f"(batch={eng.batch_size}), {total_new} generated tokens in "
+          f"{dt:.2f}s ({total_new / dt:.1f} tok/s); finish={dict(reasons)}")
     for i, r in enumerate(reqs[:4]):
         print(f"  req{i}: prompt={r.prompt[:8].tolist()}... "
-              f"out={r.out_tokens[:12].tolist()}")
+              f"out={r.out_tokens[:12].tolist()} ({r.finish_reason})")
 
 
 if __name__ == "__main__":

@@ -106,13 +106,21 @@ def attention_block(
     p: Params,
     x: jax.Array,  # (B, L, D)
     cfg,
-    positions: jax.Array,  # (L,) absolute positions of x
+    positions: jax.Array,  # (L,) or (B, L) absolute positions of x
     cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,KV,Lmax,hd) k, v
-    cache_index: Optional[jax.Array] = None,  # scalar: write offset
+    cache_index: Optional[jax.Array] = None,  # scalar or (B,): write offset(s)
     use_pallas: bool = False,
+    attn_mask: Optional[jax.Array] = None,  # (B, L) True = real token
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """Returns (out, updated_cache). With a cache, keys/values are written at
-    cache_index and attention runs over the full cache (decode/prefill)."""
+    cache_index and attention runs over the full cache (decode/prefill).
+
+    A scalar ``cache_index`` writes all rows at one offset (lockstep prefill /
+    wave decode); a ``(B,)`` vector writes row i at ``cache_index[i]`` and
+    masks row i's attention to ``kpos <= cache_index[i] + ...`` — the
+    continuous-batching decode contract where every slot sits at its own
+    depth. ``attn_mask`` marks padding tokens (False) so they are never
+    attended to, fixing left-padded batched prefill at the source."""
     B, L, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     cd = jnp.dtype(cfg.compute_dtype)
@@ -131,41 +139,84 @@ def attention_block(
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
+    idx = None if cache_index is None else jnp.asarray(cache_index, jnp.int32)
     new_cache = None
     if cache is not None and len(cache) == 1:
         # fused layout: one (B, KV, L, 2, hd) tensor -> a single
         # dynamic-update-slice per step instead of two (§Perf decode variant)
         ckv = cache[0]
         kv = jnp.stack([k, v], axis=3).astype(ckv.dtype)  # (B,KV,L,2,hd)
-        ckv = jax.lax.dynamic_update_slice(ckv, kv, (0, 0, cache_index, 0, 0))
+        if idx.ndim:  # per-slot write offsets (continuous-batching decode)
+            ckv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+                c, u, (0, i, 0, 0)))(ckv, kv, idx)
+        else:
+            ckv = jax.lax.dynamic_update_slice(ckv, kv, (0, 0, idx, 0, 0))
         new_cache = (ckv,)
         k_att = ckv[:, :, :, 0, :].astype(cd)
         v_att = ckv[:, :, :, 1, :].astype(cd)
-        q_offset = cache_index
+        q_offset = idx
     elif cache is not None:
         ck, cv = cache
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, cache_index, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, cache_index, 0))
+        if idx.ndim:
+            ck = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+                c, u, (0, i, 0)))(ck, k.astype(ck.dtype), idx)
+            cv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+                c, u, (0, i, 0)))(cv, v.astype(cv.dtype), idx)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, idx, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, idx, 0))
         new_cache = (ck, cv)
         k_att, v_att = ck.astype(cd), cv.astype(cd)
-        q_offset = cache_index
+        q_offset = idx
     else:
         k_att, v_att = k, v
         q_offset = 0
 
-    if use_pallas:
+    key_mask = _expand_key_mask(attn_mask, idx, L, k_att.shape[2],
+                                cached=cache is not None)
+    if use_pallas and cache is None and key_mask is None:
         o = ops.attention(q, k_att, v_att, causal=cfg.causal,
-                          q_offset=int(q_offset) if cache is None else 0,
-                          use_pallas=True)
+                          q_offset=0, use_pallas=True)
     else:
-        o = _xla_attention(q, k_att, v_att, causal=cfg.causal, q_offset=q_offset)
+        # cache / masked paths run the jnp kernel: the flash kernel only
+        # understands a static scalar q_offset, not per-row offsets or pad
+        # masks. (interpret-mode Pallas is a correctness path anyway.)
+        o = _xla_attention(q, k_att, v_att, causal=cfg.causal,
+                           q_offset=q_offset, key_mask=key_mask)
     o = o.transpose(0, 2, 1, 3).reshape(B, L, H * hd)
     out = jnp.einsum("blh,hd->bld", o, p["wo"].astype(cd)).astype(x.dtype)
     return out, new_cache
 
 
-def _xla_attention(q, k, v, causal: bool, q_offset) -> jax.Array:
-    """jnp attention with GQA grouping kept factored (no KV repeat in HBM)."""
+def _expand_key_mask(attn_mask, idx, L: int, Lk: int, cached: bool):
+    """(B, L) pad mask -> (B, Lk) key mask over this call's attention keys.
+
+    Without a cache the keys are exactly this call's tokens. With a cache the
+    keys span the whole cache; the call's mask lands on the written window
+    [idx, idx + L) and everything outside it is presumed valid (unwritten
+    tail entries are hidden by the causal mask)."""
+    if attn_mask is None:
+        return None
+    attn_mask = jnp.asarray(attn_mask, bool)
+    if not cached:
+        return attn_mask
+    if idx.ndim:
+        raise NotImplementedError(
+            "attn_mask with per-row cache_index is unsupported; "
+            "continuous-batching decode feeds one real token per row")
+    pos = jnp.arange(Lk, dtype=jnp.int32)[None, :]  # (1, Lk)
+    col = jnp.clip(pos - idx, 0, L - 1)
+    in_window = (pos >= idx) & (pos < idx + L)
+    return jnp.where(in_window, jnp.take_along_axis(attn_mask, col, axis=1),
+                     True)
+
+
+def _xla_attention(q, k, v, causal: bool, q_offset, key_mask=None) -> jax.Array:
+    """jnp attention with GQA grouping kept factored (no KV repeat in HBM).
+
+    ``q_offset`` is the absolute position of the first query: a scalar for
+    lockstep batches or a (B,) vector when every row decodes at its own depth.
+    ``key_mask`` is an optional (B, Lk) validity mask over the keys."""
     B, H, Lq, hd = q.shape
     KV, Lk = k.shape[1], k.shape[2]
     g = H // KV
@@ -173,11 +224,20 @@ def _xla_attention(q, k, v, causal: bool, q_offset) -> jax.Array:
     scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
     logits = jnp.einsum("bkgqd,bkld->bkgql", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
+    mask = None
     if causal:
-        qpos = jnp.arange(Lq) + q_offset
-        kpos = jnp.arange(Lk)
-        mask = kpos[None, :] <= qpos[:, None]
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        off = jnp.asarray(q_offset, jnp.int32)
+        if off.ndim:
+            qpos = jnp.arange(Lq, dtype=jnp.int32)[None, :] + off[:, None]
+        else:
+            qpos = (jnp.arange(Lq, dtype=jnp.int32) + off)[None, :]
+        kpos = jnp.arange(Lk, dtype=jnp.int32)
+        mask = kpos[None, None, :] <= qpos[:, :, None]  # (B|1, Lq, Lk)
+    if key_mask is not None:
+        km = key_mask[:, None, :]  # (B, 1, Lk)
+        mask = km if mask is None else (mask & km)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkgql,bkld->bkgqd", probs, v.astype(jnp.float32))
     return o.reshape(B, H, Lq, hd).astype(q.dtype)

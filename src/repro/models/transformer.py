@@ -116,12 +116,45 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         lambda a: jnp.broadcast_to(a[None], (cfg.repeats,) + a.shape), one)
 
 
+def insert_cache_slot(cache: PyTree, row: PyTree, slot) -> PyTree:
+    """Write a single-sequence cache (batch size 1) into batch slot ``slot``
+    of a pooled cache. Every leaf is stacked (repeats, B, ...), so the batch
+    axis is axis 1. This is the continuous-batching admission primitive:
+    prefill a request at batch 1, then splice its KV/state row into the
+    freed slot while the other slots keep decoding."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree.map(
+        lambda p, r: jax.lax.dynamic_update_slice_in_dim(
+            p, r.astype(p.dtype), slot, axis=1), cache, row)
+
+
+def reset_cache_slot(cache: PyTree, slot) -> PyTree:
+    """Zero one batch slot of a pooled cache (slot retirement hygiene)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree.map(
+        lambda p: jax.lax.dynamic_update_slice_in_dim(
+            p, jnp.zeros_like(p[:, :1]), slot, axis=1), cache)
+
+
+def cache_footprint_words(cfg: ModelConfig, max_len: int,
+                          dtype=jnp.bfloat16) -> float:
+    """Per-sequence decode-cache size in 32-bit words (the paper's unit).
+
+    Computed from ``init_cache`` via eval_shape (no allocation); the serving
+    engine divides a HardwareTarget's HBM budget by this to size its slot
+    pool."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, 1, max_len, dtype))
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(shapes)) / 4.0
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 
 def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
-                  cache_index, n_groups: int, use_pallas: bool, decode: bool):
+                  cache_index, n_groups: int, use_pallas: bool, decode: bool,
+                  attn_mask=None):
     """One pattern unit; returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, PyTree] = {}
@@ -138,7 +171,8 @@ def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
                 cache = (bc["k"], bc["v"])
             out, upd = attention_block(blk["core"], h, cfg, positions,
                                        cache=cache, cache_index=cache_index,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas,
+                                       attn_mask=attn_mask)
             if upd is not None:
                 new_cache[f"b{i}"] = ({"kv": upd[0]} if cfg.fused_kv_cache
                                       else {"k": upd[0], "v": upd[1]})
@@ -192,8 +226,19 @@ def hidden_forward(
     remat: bool = False,
     decode: bool = False,
     act_spec=None,  # PartitionSpec for (B, L, D) activations (seq parallel)
+    attn_mask: Optional[jax.Array] = None,  # (B, L) True = real token
+    positions: Optional[jax.Array] = None,  # (L,) or (B, L) RoPE positions
 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
-    """Backbone only: returns (final-norm hidden states, new_cache, aux)."""
+    """Backbone only: returns (final-norm hidden states, new_cache, aux).
+
+    ``cache_index`` may be a scalar (all rows at one depth: training, lockstep
+    prefill) or a (B,) vector (each row at its own depth: continuous-batching
+    decode); positions default to ``arange(L) + cache_index`` per row.
+    ``attn_mask`` marks padding (False) so attention never reads pad tokens —
+    with explicit ``positions`` this makes left-padded batched prefill exact.
+    Recurrent blocks (mamba/xlstm) consume every position in order, so padded
+    batches are attention-arch-only; serve ragged recurrent prompts at their
+    exact length (the serving engine's prefill-into-slot does)."""
     cd = jnp.dtype(cfg.compute_dtype)
     if embeds is not None:
         x = embeds.astype(cd)
@@ -202,7 +247,13 @@ def hidden_forward(
     B, L, _ = x.shape
     if cache_index is None:
         cache_index = jnp.zeros((), jnp.int32)
-    positions = jnp.arange(L, dtype=jnp.int32) + cache_index
+    cache_index = jnp.asarray(cache_index, jnp.int32)
+    if positions is None:
+        if cache_index.ndim:  # (B,) per-slot depths -> (B, L) positions
+            positions = (jnp.arange(L, dtype=jnp.int32)[None, :]
+                         + cache_index[:, None])
+        else:
+            positions = jnp.arange(L, dtype=jnp.int32) + cache_index
 
     def constrain(a):
         if act_spec is not None:
@@ -212,7 +263,8 @@ def hidden_forward(
     x = constrain(x)
     body_fn = functools.partial(
         _unit_forward, cfg=cfg, positions=positions, cache_index=cache_index,
-        n_groups=n_groups, use_pallas=use_pallas, decode=decode)
+        n_groups=n_groups, use_pallas=use_pallas, decode=decode,
+        attn_mask=attn_mask)
 
     def scan_body(carry, xs):
         x, aux = carry
@@ -245,12 +297,15 @@ def forward(
     remat: bool = False,
     decode: bool = False,
     act_spec=None,
+    attn_mask: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     """Returns (logits, new_cache, aux_loss)."""
     x, new_cache, aux = hidden_forward(
         params, cfg, tokens=tokens, embeds=embeds, cache=cache,
         cache_index=cache_index, n_groups=n_groups, use_pallas=use_pallas,
-        remat=remat, decode=decode, act_spec=act_spec)
+        remat=remat, decode=decode, act_spec=act_spec, attn_mask=attn_mask,
+        positions=positions)
     logits = lm_logits(params["head"], x, jnp.dtype(cfg.compute_dtype))
     return logits, new_cache, aux
 

@@ -14,9 +14,9 @@ processor grids (§3.2 eq. 6, §4.2, §5) — behind one API:
     ep.sharding       # PartitionSpecs when the target has mesh axes
 
 Every kernel (`kernels.conv2d`, `kernels.matmul`, ...) accepts ``plan=`` /
-``target=``; the legacy per-module planners (`plan_conv_tiles`,
-`plan_tiles`, direct `optimize_blocking` calls, ...) remain as thin shims
-over this module.
+``target=``. The legacy per-module planners (`plan_conv_tiles`,
+`plan_tiles`) are retired; `core.tiling` / `core.sharding_opt` remain as the
+planner's low-level building blocks.
 """
 
 from .ops import (  # noqa: F401

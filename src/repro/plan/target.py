@@ -40,6 +40,7 @@ class HardwareTarget:
     name: str
     vmem_words: float = float(TPU_VMEM_WORDS)  # scratchpad / cache / VMEM
     acc_words: Optional[float] = None  # separate accumulator ("split" only)
+    hbm_words: float = 4 * 2**30 / 4.0  # main-memory capacity (KV-cache pool)
     memory: str = "unified"  # "unified" | "split" (paper eq. 6 vs §5)
     double_buffer: bool = True  # §5: halves usable capacity
     precision: Precision = BF16_ACC32  # default when the OpSpec has none
@@ -85,6 +86,7 @@ class HardwareTarget:
             "name": self.name,
             "vmem_words": self.vmem_words,
             "acc_words": self.acc_words,
+            "hbm_words": self.hbm_words,
             "memory": self.memory,
             "double_buffer": self.double_buffer,
             "precision": list(self.precision.as_tuple()),
@@ -101,6 +103,7 @@ class HardwareTarget:
             name=d["name"],
             vmem_words=float(d["vmem_words"]),
             acc_words=None if d.get("acc_words") is None else float(d["acc_words"]),
+            hbm_words=float(d.get("hbm_words", 4 * 2**30 / 4.0)),
             memory=d.get("memory", "unified"),
             double_buffer=bool(d.get("double_buffer", True)),
             precision=Precision(*d.get("precision", (0.5, 0.5, 1.0))),
@@ -119,6 +122,7 @@ class HardwareTarget:
 TPU_V5E = HardwareTarget(
     name="tpu_v5e",
     vmem_words=float(TPU_VMEM_WORDS),
+    hbm_words=16 * 2**30 / 4.0,  # 16 GiB HBM per v5e chip
     memory="unified",
     precision=BF16_ACC32,
     interpret=True,  # no TPU in this container; set False on real hardware
@@ -132,6 +136,8 @@ GEMMINI = HardwareTarget(
     name="gemmini",
     vmem_words=256 * 1024 / 4.0,
     acc_words=64 * 1024 / 4.0,
+    hbm_words=2**30 / 4.0,  # 1 GiB FireSim DRAM
+
     memory="split",
     precision=INT8_ACC32,
     interpret=True,

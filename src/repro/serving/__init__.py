@@ -1,1 +1,6 @@
-from .engine import Engine, Request, make_decode_step, make_prefill_step  # noqa: F401
+from .engine import (  # noqa: F401
+    Engine,
+    Request,
+    WaveEngine,
+    plan_batch_size,
+)

@@ -1,19 +1,50 @@
-"""Batched serving engine: prefill + lockstep decode with wave-style
-continuous batching.
+"""Slot-based continuous-batching serving engine.
 
-A wave = a fixed batch of requests padded to a common prompt length. The
-engine prefills the whole wave in one pjit'd call (chunked-sequence forward
-writes the KV cache / recurrent state), then decodes in lockstep; finished
-sequences are masked. When every sequence in a wave finishes, the next wave
-is formed from the queue. This is the batching regime the decode_32k /
-long_500k dry-run cells lower: serve_step = one token for the whole batch
-against a seq_len-deep cache.
+A fixed pool of ``batch_size`` KV-cache/state *slots* decodes in lockstep;
+each slot carries its own cache depth (``cache_index``), so the moment a
+request finishes its slot is refilled from the queue mid-flight
+(prefill-into-slot) instead of barriering until the whole batch drains.
+This is the decode-axis analogue of the paper's processor-utilization
+argument for distributed convolutions: never let a fast processor idle on
+the slowest one's critical path.
+
+Scheduling contract:
+  * admission: a queued request is prefilled alone at its exact prompt
+    length (no padding -> exact for attention *and* recurrent archs), then
+    its batch-1 cache row is spliced into the freed slot
+    (``transformer.insert_cache_slot``) while other slots keep decoding.
+    Pure-attention archs round prompt lengths up to ``prefill_bucket``
+    (pad tail masked via ``attn_mask`` — still exact, see
+    test_masked_cached_prefill_ignores_pad_tail) so ragged traffic compiles
+    at most max_len/bucket prefill variants instead of one per length.
+  * decode: one pjit'd step for the whole pool with per-slot write offsets
+    and positions; a slot only attends to its own prefix (per-row causal
+    masking in ``layers._xla_attention``). Free/finished slots ride along
+    masked-out: their sampled tokens are discarded and their rows are fully
+    overwritten at the next admission.
+  * accounting: per-request EOS/stop tokens, ``max_new_tokens``, and the
+    cache-capacity budget are tracked per slot; ``out_tokens`` holds ONLY
+    tokens that were really generated (the old wave engine zero-padded).
+
+Sampling is stateless: the key for a sampled token is
+``fold_in(fold_in(PRNGKey(engine_seed), request_seed), step)``, a pure
+function of the engine seed, the request's ``rng_seed`` (default: its
+submission index) and how many tokens that request has produced — never of
+which other requests share the batch. Greedy rows take an argmax and touch
+no randomness. Together with exact-length prefill this makes every
+request's output batch-invariant, greedy or sampled.
+
+``WaveEngine`` keeps the old wave-lockstep *scheduling* (admission only
+when every slot is free) on top of the same corrected primitives; it exists
+as the benchmark baseline for ``benchmarks/serving_bench.py``.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, List, Optional
+import functools
+from typing import Any, Deque, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,86 +59,237 @@ PyTree = Any
 
 @dataclasses.dataclass
 class Request:
+    """One generation request.
+
+    ``stop_tokens``: emitting any of these token ids ends the request; the
+    stop token is kept as the last element of ``out_tokens``.
+    ``rng_seed``: per-request sampling stream id (default: submission index).
+    Fix it to make a sampled request reproducible across batch compositions.
+    After serving, ``out_tokens`` holds exactly the generated tokens and
+    ``finish_reason`` is one of:
+      * ``"stop"``        - a stop token was emitted
+      * ``"length"``      - ``max_new_tokens`` reached
+      * ``"cache_limit"`` - the ``max_len`` cache filled up first
+    """
+
     prompt: np.ndarray  # (len,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0  # 0 = greedy
+    stop_tokens: Tuple[int, ...] = ()
+    rng_seed: Optional[int] = None
     out_tokens: Optional[np.ndarray] = None
+    finish_reason: Optional[str] = None
 
 
-def make_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
-    def prefill(params, cache, tokens):  # tokens (B, Lp)
+@dataclasses.dataclass
+class _Slot:
+    """Host-side bookkeeping for one occupied cache slot."""
+
+    request: Request
+    budget: int  # min(max_new_tokens, cache capacity left after the prompt)
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+
+def plan_batch_size(cfg: ModelConfig, max_len: int, target: HardwareTarget,
+                    cap: int = 64, hbm_fraction: float = 0.25) -> int:
+    """Slot-pool size from the target's memory model: how many ``max_len``
+    cache rows fit in a fraction of HBM (params/activations keep the rest),
+    rounded to the MXU sublane multiple so decode GEMMs keep full rows."""
+    slot_words = T.cache_footprint_words(cfg, max_len)
+    b = int((hbm_fraction * target.hbm_words) // max(slot_words, 1.0))
+    b = max(1, min(cap, b))
+    if b >= target.align_sublane > 1:
+        b -= b % target.align_sublane
+    return b
+
+
+@functools.lru_cache(maxsize=None)
+def _make_steps(cfg: ModelConfig, max_len: int, use_pallas: bool):
+    """Compiled (prefill, insert, decode, sample) steps, shared across every
+    engine with the same (cfg, max_len, use_pallas) so warm jit caches carry
+    over between engines (and between the bench's wave/continuous runs)."""
+
+    def prefill(params, tokens, attn_mask, last):  # tokens (1, Lp)
+        """Lp is the exact prompt length, or a bucket length with the pad
+        tail masked out (attention archs); ``last`` indexes the real last
+        token's logits. Pad junk written into the cache tail is hidden by
+        per-row causal masking until decode overwrites it in place."""
+        cache = T.init_cache(cfg, 1, max_len)
         logits, cache, _ = T.forward(params, cfg, tokens=tokens, cache=cache,
                                      cache_index=jnp.zeros((), jnp.int32),
+                                     attn_mask=attn_mask,
                                      use_pallas=use_pallas)
-        return logits[:, -1], cache
-    return jax.jit(prefill, donate_argnums=(1,))
+        return jax.lax.dynamic_index_in_dim(logits, last, axis=1,
+                                            keepdims=False), cache
 
+    def insert(pool, row, slot):
+        return T.insert_cache_slot(pool, row, slot)
 
-def make_decode_step(cfg: ModelConfig, use_pallas: bool = False):
-    def decode(params, cache, token, index):  # token (B,1), index scalar
+    def decode(params, cache, token, index):  # token (B, 1), index (B,)
         logits, cache, _ = T.forward(params, cfg, tokens=token, cache=cache,
                                      cache_index=index, decode=True,
                                      use_pallas=use_pallas)
         return logits[:, -1], cache
-    return jax.jit(decode, donate_argnums=(1,))
+
+    def sample(logits, base_key, seeds, steps, temps):
+        """Row i: greedy argmax if temps[i] == 0, else a categorical draw
+        keyed by (base_key, seeds[i], steps[i]) — no shared key state, so
+        batch composition can never shift anyone's sampling stream."""
+        greedy = jnp.argmax(logits, axis=-1)
+
+        def one(seed, step, row, t):
+            key = jax.random.fold_in(jax.random.fold_in(base_key, seed), step)
+            return jax.random.categorical(
+                key, row / jnp.maximum(t, 1e-6), axis=-1)
+
+        sampled = jax.vmap(one)(seeds, steps, logits, temps)
+        return jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
+
+    return (jax.jit(prefill),
+            jax.jit(insert, donate_argnums=(0,)),
+            jax.jit(decode, donate_argnums=(1,)),
+            jax.jit(sample))
 
 
 class Engine:
+    """Continuous-batching engine over a fixed slot pool.
+
+    ``batch_size=None`` sizes the pool from the ``HardwareTarget``'s memory
+    model (``plan_batch_size``)."""
+
     def __init__(self, cfg: ModelConfig, params: PyTree, max_len: int = 512,
-                 batch_size: int = 4, use_pallas: Optional[bool] = None,
-                 seed: int = 0, target: Optional[HardwareTarget] = None):
+                 batch_size: Optional[int] = None,
+                 use_pallas: Optional[bool] = None,
+                 seed: int = 0, target: Optional[HardwareTarget] = None,
+                 prefill_bucket: Optional[int] = None):
         assert cfg.causal, "serving requires a decoder model"
         self.cfg, self.params = cfg, params
-        self.max_len, self.batch_size = max_len, batch_size
+        self.max_len = max_len
         self.target = target or CPU_INTERPRET
         if use_pallas is None:
             use_pallas = self.target.use_pallas
-        self.prefill_step = make_prefill_step(cfg, use_pallas)
-        self.decode_step = make_decode_step(cfg, use_pallas)
-        self.key = jax.random.PRNGKey(seed)
+        if batch_size is None:
+            batch_size = plan_batch_size(cfg, max_len, self.target)
+        self.batch_size = batch_size
+        if prefill_bucket is None:
+            # ragged prompts each jit a prefill per distinct length; rounding
+            # lengths up to a bucket bounds that to max_len/bucket traces.
+            # Masked padded prefill is exact only for attention blocks —
+            # recurrent state consumes every position, so those archs stay
+            # at exact lengths (one trace per distinct length).
+            prefill_bucket = 16 if set(cfg.pattern) == {"attn"} else 1
+        elif prefill_bucket > 1 and set(cfg.pattern) != {"attn"}:
+            raise ValueError(
+                "prefill_bucket > 1 requires a pure-attention pattern: "
+                "recurrent blocks fold pad tokens into their state")
+        self.prefill_bucket = max(1, prefill_bucket)
+        (self._prefill, self._insert, self._decode, self._sample) = \
+            _make_steps(cfg, max_len, bool(use_pallas))
+        self.base_key = jax.random.PRNGKey(seed)
 
-    def _sample_wave(self, logits: jax.Array, temps: np.ndarray) -> jax.Array:
-        """Per-request sampling: row i uses wave[i].temperature, greedy rows
-        (temperature 0) take the argmax — mixing greedy and sampling requests
-        in one wave must not randomize the greedy ones."""
-        greedy = jnp.argmax(logits, axis=-1)
-        hot = temps > 0.0
-        if not hot.any():
-            return greedy
-        self.key, sub = jax.random.split(self.key)
-        safe_t = jnp.asarray(np.where(hot, temps, 1.0), logits.dtype)
-        sampled = jax.random.categorical(sub, logits / safe_t[:, None], axis=-1)
-        return jnp.where(jnp.asarray(hot), sampled, greedy)
+    # -- scheduling policy ----------------------------------------------------
+    def _admission_open(self, slots: List[Optional[_Slot]]) -> bool:
+        """Continuous batching: any free slot may be refilled immediately."""
+        return True
 
-    def _run_wave(self, wave: List[Request]) -> None:
-        B = len(wave)
-        Lp = max(len(r.prompt) for r in wave)
-        prompts = np.zeros((B, Lp), np.int32)
-        for i, r in enumerate(wave):  # left-pad to right-align the prompts
-            prompts[i, Lp - len(r.prompt):] = r.prompt
-        cache = T.init_cache(self.cfg, B, self.max_len)
-        logits, cache = self.prefill_step(self.params, cache,
-                                          jnp.asarray(prompts))
-        max_new = max(r.max_new_tokens for r in wave)
-        temps = np.array([r.temperature for r in wave], np.float32)
-        out = np.zeros((B, max_new), np.int32)
-        tok = self._sample_wave(logits, temps)
-        index = jnp.asarray(Lp, jnp.int32)
-        for t in range(max_new):
-            out[:, t] = np.asarray(tok)
-            if t == max_new - 1 or int(index) >= self.max_len - 1:
-                break
-            logits, cache = self.decode_step(self.params, cache,
-                                             tok[:, None], index)
-            tok = self._sample_wave(logits, temps)
-            index = index + 1
-        for i, r in enumerate(wave):
-            r.out_tokens = out[i, :r.max_new_tokens]
-
+    # -- serving loop ---------------------------------------------------------
     def serve(self, requests: List[Request]) -> List[Request]:
-        """Continuous wave batching over the queue."""
-        queue = list(requests)
-        while queue:
-            wave, queue = queue[:self.batch_size], queue[self.batch_size:]
-            self._run_wave(wave)
+        B = self.batch_size
+        for r in requests:
+            if not 1 <= len(r.prompt) <= self.max_len:
+                raise ValueError(
+                    f"prompt length {len(r.prompt)} outside [1, {self.max_len}]")
+            if r.max_new_tokens < 1:
+                raise ValueError("max_new_tokens must be >= 1")
+            if r.rng_seed is not None and not -2**31 <= r.rng_seed < 2**31:
+                raise ValueError("rng_seed must fit in int32")
+        queue: Deque[Tuple[int, Request]] = collections.deque(
+            enumerate(requests))
+        cache = T.init_cache(self.cfg, B, self.max_len)
+        slots: List[Optional[_Slot]] = [None] * B
+        tok = np.zeros(B, np.int32)    # last accepted token per slot
+        pos = np.zeros(B, np.int32)    # cache depth: next decode write offset
+        seeds = np.zeros(B, np.int32)  # per-slot sampling stream ids
+        temps = np.zeros(B, np.float32)
+
+        def record(s: int, t: int) -> None:
+            """Account one generated token for slot s; free it when done."""
+            slot = slots[s]
+            slot.generated.append(int(t))
+            r = slot.request
+            if int(t) in r.stop_tokens:
+                reason = "stop"
+            elif len(slot.generated) >= slot.budget:
+                reason = ("length" if slot.budget >= r.max_new_tokens
+                          else "cache_limit")
+            else:
+                tok[s] = int(t)
+                return
+            r.out_tokens = np.asarray(slot.generated, np.int32)
+            r.finish_reason = reason
+            slots[s] = None
+            tok[s], temps[s] = 0, 0.0  # dead row decodes greedily into void
+
+        while queue or any(s is not None for s in slots):
+            # -- admission: prefill queued requests into freed slots --------
+            if queue and self._admission_open(slots):
+                for s in range(B):
+                    if not queue or slots[s] is not None:
+                        continue
+                    rid, r = queue.popleft()
+                    plen = len(r.prompt)
+                    # token 1 comes from the prefill logits; token k needs a
+                    # cache write at plen + k - 2 <= max_len - 1
+                    budget = min(r.max_new_tokens, self.max_len - plen + 1)
+                    slots[s] = _Slot(request=r, budget=budget)
+                    seeds[s] = r.rng_seed if r.rng_seed is not None else rid
+                    temps[s] = r.temperature
+                    pos[s] = plen
+                    lp = min(self.max_len,
+                             -(-plen // self.prefill_bucket)
+                             * self.prefill_bucket)
+                    tokens = np.zeros((1, lp), np.int32)
+                    tokens[0, :plen] = r.prompt
+                    mask = np.zeros((1, lp), bool)
+                    mask[0, :plen] = True
+                    logits1, row = self._prefill(
+                        self.params, jnp.asarray(tokens), jnp.asarray(mask),
+                        jnp.asarray(plen - 1, jnp.int32))
+                    cache = self._insert(cache, row, s)
+                    first = self._sample(
+                        logits1, self.base_key,
+                        jnp.asarray(seeds[s:s + 1]),
+                        jnp.zeros(1, jnp.int32),
+                        jnp.asarray(temps[s:s + 1]))
+                    record(s, int(np.asarray(first)[0]))
+            active = [s for s in range(B) if slots[s] is not None]
+            if not active:
+                continue  # everything admitted this round finished instantly
+            # -- one lockstep decode step over the pool ---------------------
+            # Free rows ride along at a clamped offset; their writes land in
+            # rows that are fully overwritten at the next insert and their
+            # samples are never recorded (active-slot masking).
+            steps = np.array([len(slots[s].generated) if slots[s] else 0
+                              for s in range(B)], np.int32)
+            idx = np.where([slots[s] is not None for s in range(B)], pos, 0)
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(tok)[:, None],
+                jnp.asarray(idx, jnp.int32))
+            nxt = np.asarray(self._sample(
+                logits, self.base_key, jnp.asarray(seeds),
+                jnp.asarray(steps), jnp.asarray(temps)))
+            for s in active:
+                pos[s] += 1
+                record(s, int(nxt[s]))
         return requests
+
+
+class WaveEngine(Engine):
+    """Wave-lockstep baseline: the old engine's scheduling (admit a full
+    batch, then barrier until every request in it finishes) on top of the
+    same corrected slot primitives. Kept as the benchmark baseline so
+    ``benchmarks/serving_bench.py`` can show what continuous batching buys
+    on mixed prompt/output lengths."""
+
+    def _admission_open(self, slots: List[Optional[_Slot]]) -> bool:
+        return all(s is None for s in slots)

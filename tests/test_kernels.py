@@ -6,11 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.conv_model import Precision
 from repro.kernels import ops, ref
 from repro.kernels.conv1d import conv1d_causal
-from repro.kernels.conv2d import conv2d, plan_conv_tiles
+from repro.kernels.conv2d import conv2d
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.matmul import matmul, plan_tiles
+from repro.kernels.matmul import matmul
+from repro.plan import ConvSpec, MatmulSpec, TPU_V5E, plan
 
 KEY = jax.random.PRNGKey(0)
 K2 = jax.random.PRNGKey(1)
@@ -40,7 +42,8 @@ def test_matmul_sweep(m, n, k, dtype):
 
 def test_matmul_tiles_divide_padded_problem():
     for (m, n, k) in [(4096, 4096, 4096), (512, 11008, 2048), (7, 13, 5)]:
-        bm, bn, bk = plan_tiles(m, n, k)
+        bm, bn, bk = plan(MatmulSpec(m, n, k, prec=Precision(0.5, 0.5, 1.0)),
+                          TPU_V5E).matmul_tiles()
         assert bm >= 1 and bn >= 1 and bk >= 1
 
 
@@ -69,7 +72,9 @@ def test_conv2d_tiles_from_lp_fit_vmem():
     """The LP tile triple must keep the blocks inside half-VMEM."""
     from repro.core.tiling import TPU_VMEM_WORDS
     N, cI, cO, hO, wO, hF, wF = 64, 64, 256, 56, 56, 3, 3
-    bN, bcI, bcO = plan_conv_tiles(N, cI, cO, hO, wO, hF, wF, 1, 1, 16)
+    spec = ConvSpec(N=N, c_I=cI, c_O=cO, w_O=wO, h_O=hO, w_F=wF, h_F=hF,
+                    prec=Precision(0.5, 0.5, 1.0))
+    bN, bcI, bcO = plan(spec, TPU_V5E).conv_tiles()
     H, W = hO + hF - 1, wO + wF - 1
     words = (0.5 * bN * bcI * H * W + 0.5 * bcO * bcI * hF * wF
              + 1.0 * bN * bcO * hO * wO)

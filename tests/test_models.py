@@ -95,6 +95,52 @@ def test_decode_matches_full_forward(arch):
                                np.asarray(full_logits), rtol=2e-3, atol=2e-3)
 
 
+def test_left_padded_forward_with_mask_matches_solo():
+    """The left-pad fix at the source: with attn_mask + per-row positions a
+    padded batch scores each row exactly as the row scored alone."""
+    cfg = dataclasses.replace(get_smoke("stablelm_1_6b"),
+                              compute_dtype="float32")
+    params = T.init_params(KEY, cfg)
+    p1 = np.array([3, 1, 4, 1, 5], np.int32)
+    p2 = np.array([7], np.int32)
+    L = len(p1)
+    padded = np.zeros((2, L), np.int32)
+    padded[0] = p1
+    padded[1, L - len(p2):] = p2
+    mask = np.zeros((2, L), bool)
+    mask[0] = True
+    mask[1, L - len(p2):] = True
+    pads = np.array([0, L - len(p2)], np.int32)
+    positions = np.arange(L, dtype=np.int32)[None, :] - pads[:, None]
+
+    lg, _, _ = T.forward(params, cfg, tokens=jnp.asarray(padded),
+                         attn_mask=jnp.asarray(mask),
+                         positions=jnp.asarray(positions))
+    for row, prompt in ((0, p1), (1, p2)):
+        solo, _, _ = T.forward(params, cfg, tokens=jnp.asarray(prompt)[None])
+        np.testing.assert_allclose(np.asarray(lg[row, -1]),
+                                   np.asarray(solo[0, -1]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_masked_cached_prefill_ignores_pad_tail():
+    """Right-padded prefill into a cache with attn_mask: pad keys in the
+    written window are never attended, so real-token logits match solo."""
+    cfg = dataclasses.replace(get_smoke("stablelm_1_6b"),
+                              compute_dtype="float32")
+    params = T.init_params(KEY, cfg)
+    p1 = np.array([3, 1, 4, 1, 5], np.int32)
+    solo, _, _ = T.forward(params, cfg, tokens=jnp.asarray(p1)[None])
+    cache = T.init_cache(cfg, 1, 16, dtype=jnp.float32)
+    padded = np.concatenate([p1, [0, 0, 0]])[None]
+    mask = np.array([[True] * len(p1) + [False] * 3])
+    lg, cache, _ = T.forward(params, cfg, tokens=jnp.asarray(padded),
+                             cache=cache, cache_index=jnp.zeros((), jnp.int32),
+                             attn_mask=jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(lg[0, len(p1) - 1]),
+                               np.asarray(solo[0, -1]), rtol=2e-4, atol=2e-4)
+
+
 def test_param_counts_match_published():
     expect = {
         "qwen2_5_3b": 3.4e9, "phi3_medium_14b": 14.7e9,

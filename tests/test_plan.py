@@ -10,8 +10,8 @@ import numpy as np
 import pytest
 
 from repro.core.conv_model import INT8_ACC32, Precision, resnet50_layers
-from repro.kernels.conv2d import conv2d, plan_conv_tiles
-from repro.kernels.matmul import matmul, plan_tiles
+from repro.kernels.conv2d import conv2d
+from repro.kernels.matmul import matmul
 from repro.kernels.ref import conv2d_ref, matmul_ref
 from repro.plan import (CPU_INTERPRET, GEMMINI, TPU_V5E, ConvSpec,
                         ExecutionPlan, HardwareTarget, MatmulSpec, get_target,
@@ -125,10 +125,18 @@ def test_kernel_rejects_mismatched_plan():
         matmul(a, b, plan=bf16_plan)
 
 
-def test_legacy_shims_still_work():
-    bN, bcI, bcO = plan_conv_tiles(64, 64, 256, 56, 56, 3, 3, 1, 1, 16)
-    assert bN >= 1 and bcI >= 1 and bcO >= 1
-    bm, bn, bk = plan_tiles(512, 512, 512)
+def test_legacy_shims_retired():
+    """The pre-redesign per-module planners are gone; ``repro.plan.plan`` is
+    the single entry point (ROADMAP open item closed in PR 2)."""
+    import repro.kernels as kernels
+    import repro.kernels.conv2d as conv2d_mod
+    import repro.kernels.matmul as matmul_mod
+    for mod in (kernels, conv2d_mod, matmul_mod):
+        assert not hasattr(mod, "plan_conv_tiles")
+        assert not hasattr(mod, "plan_tiles")
+    # the replacement path produces the same aligned tiles the shims did
+    bm, bn, bk = plan(MatmulSpec(512, 512, 512, prec=Precision(0.5, 0.5, 1.0)),
+                      TPU_V5E).matmul_tiles()
     assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0
 
 

@@ -1,5 +1,6 @@
-"""Serving engine tests: wave batching, greedy consistency with full
-forward, recurrent-arch decode."""
+"""Serving engine tests: slot-based continuous batching, batch invariance
+(greedy and sampled), EOS / cache-limit accounting, seeded reproducibility,
+wave-baseline parity, recurrent-arch decode, plan-aware batch sizing."""
 
 import dataclasses
 
@@ -10,7 +11,8 @@ import pytest
 
 from repro.configs import get_smoke
 from repro.models import transformer as T
-from repro.serving.engine import Engine, Request
+from repro.plan import CPU_INTERPRET
+from repro.serving.engine import Engine, Request, WaveEngine, plan_batch_size
 
 KEY = jax.random.PRNGKey(0)
 
@@ -20,72 +22,220 @@ def _params_and_cfg(arch):
     return T.init_params(KEY, cfg), cfg
 
 
+P1 = np.array([3, 1, 4, 1, 5], np.int32)
+P2 = np.array([7], np.int32)
+P3 = np.array([2, 7, 1], np.int32)
+
+
 def test_greedy_matches_manual_decode():
     params, cfg = _params_and_cfg("stablelm_1_6b")
-    prompt = np.array([3, 1, 4, 1, 5], np.int32)
     eng = Engine(cfg, params, max_len=32, batch_size=1)
-    req = Request(prompt=prompt, max_new_tokens=6)
+    req = Request(prompt=P1, max_new_tokens=6)
     eng.serve([req])
 
     # manual greedy via repeated full forwards (no cache)
-    toks = list(prompt)
+    toks = list(P1)
     for _ in range(6):
         lg, _, _ = T.forward(params, cfg,
                              tokens=jnp.asarray([toks], jnp.int32))
         toks.append(int(jnp.argmax(lg[0, -1])))
-    np.testing.assert_array_equal(req.out_tokens, np.array(toks[len(prompt):]))
+    np.testing.assert_array_equal(req.out_tokens, np.array(toks[len(P1):]))
+    assert req.finish_reason == "length"
 
 
-def test_wave_batching_processes_all_requests():
+def test_queue_longer_than_pool_processes_all_requests():
     params, cfg = _params_and_cfg("stablelm_1_6b")
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(2, 8)).astype(np.int32),
                     max_new_tokens=4) for _ in range(5)]
-    eng = Engine(cfg, params, max_len=32, batch_size=2)  # 3 waves
+    eng = Engine(cfg, params, max_len=32, batch_size=2)  # 5 requests, 2 slots
     eng.serve(reqs)
     for r in reqs:
         assert r.out_tokens is not None and len(r.out_tokens) == 4
         assert r.out_tokens.min() >= 0
+        assert r.finish_reason == "length"
 
 
 @pytest.mark.parametrize("arch", ["xlstm_1_3b", "jamba_1_5_large"])
 def test_recurrent_arch_serving(arch):
-    """SSM/hybrid archs decode through recurrent state, not a KV window."""
+    """SSM/hybrid archs decode through recurrent state, not a KV window;
+    exact-length prefill-into-slot keeps them batch-invariant too."""
     params, cfg = _params_and_cfg(arch)
-    eng = Engine(cfg, params, max_len=32, batch_size=2)
+    solo = Request(prompt=np.array([1, 2, 3], np.int32), max_new_tokens=4)
+    Engine(cfg, params, max_len=32, batch_size=1).serve([solo])
     reqs = [Request(prompt=np.array([1, 2, 3], np.int32), max_new_tokens=4),
             Request(prompt=np.array([9, 8], np.int32), max_new_tokens=4)]
-    eng.serve(reqs)
+    Engine(cfg, params, max_len=32, batch_size=2).serve(reqs)
     for r in reqs:
         assert len(r.out_tokens) == 4
+    np.testing.assert_array_equal(solo.out_tokens, reqs[0].out_tokens)
 
 
-def test_batched_left_padding_preserves_per_request_output():
-    """A request's greedy output must not depend on its batch-mates."""
+def test_batch_invariance_greedy_mixed_lengths():
+    """Regression for the left-pad wave bug: a short prompt decoded in a
+    mixed-length batch must match the same prompt decoded alone."""
     params, cfg = _params_and_cfg("stablelm_1_6b")
-    p1 = np.array([3, 1, 4, 1, 5], np.int32)
-    p2 = np.array([7], np.int32)
+    solo_long = Request(prompt=P1, max_new_tokens=4)
+    solo_short = Request(prompt=P2, max_new_tokens=4)
+    Engine(cfg, params, max_len=32, batch_size=1).serve([solo_long])
+    Engine(cfg, params, max_len=32, batch_size=1).serve([solo_short])
 
-    solo = Request(prompt=p1, max_new_tokens=4)
-    Engine(cfg, params, max_len=32, batch_size=1).serve([solo])
+    for order in ([P1, P2], [P2, P1]):
+        pair = [Request(prompt=p, max_new_tokens=4) for p in order]
+        Engine(cfg, params, max_len=32, batch_size=2).serve(pair)
+        by_len = {len(r.prompt): r for r in pair}
+        np.testing.assert_array_equal(solo_long.out_tokens,
+                                      by_len[len(P1)].out_tokens)
+        np.testing.assert_array_equal(solo_short.out_tokens,
+                                      by_len[len(P2)].out_tokens)
 
-    pair = [Request(prompt=p1, max_new_tokens=4),
-            Request(prompt=p2, max_new_tokens=4)]
-    Engine(cfg, params, max_len=32, batch_size=2).serve(pair)
-    np.testing.assert_array_equal(solo.out_tokens, pair[0].out_tokens)
+
+def test_batch_invariance_sampled():
+    """A sampled request with a pinned rng_seed produces identical tokens
+    alone and in any batch composition (per-request sampling streams)."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    mk = lambda: Request(prompt=P1, max_new_tokens=5, temperature=0.9,
+                         rng_seed=42)
+    solo = mk()
+    Engine(cfg, params, max_len=32, batch_size=1, seed=7).serve([solo])
+    batched = [Request(prompt=P2, max_new_tokens=3),
+               mk(),
+               Request(prompt=P3, max_new_tokens=8, temperature=1.3)]
+    Engine(cfg, params, max_len=32, batch_size=3, seed=7).serve(batched)
+    np.testing.assert_array_equal(solo.out_tokens, batched[1].out_tokens)
 
 
 def test_greedy_unaffected_by_sampling_batchmate():
-    """Per-request temperatures: a greedy request batched with a temperature>0
-    request must still produce its deterministic greedy output."""
+    """A greedy request batched with a temperature>0 request must still
+    produce its deterministic greedy output."""
     params, cfg = _params_and_cfg("stablelm_1_6b")
-    p1 = np.array([3, 1, 4, 1, 5], np.int32)
-    p2 = np.array([2, 7, 1], np.int32)
-
-    solo = Request(prompt=p1, max_new_tokens=5, temperature=0.0)
+    solo = Request(prompt=P1, max_new_tokens=5, temperature=0.0)
     Engine(cfg, params, max_len=32, batch_size=1).serve([solo])
 
-    mixed = [Request(prompt=p1, max_new_tokens=5, temperature=0.0),
-             Request(prompt=p2, max_new_tokens=5, temperature=1.0)]
+    mixed = [Request(prompt=P1, max_new_tokens=5, temperature=0.0),
+             Request(prompt=P3, max_new_tokens=5, temperature=1.0)]
     Engine(cfg, params, max_len=32, batch_size=2).serve(mixed)
     np.testing.assert_array_equal(solo.out_tokens, mixed[0].out_tokens)
+
+
+def test_seeded_runs_reproducible_across_batch_compositions():
+    """Key consumption depends only on (engine seed, request rng_seed, step)
+    — never on which requests share the pool — so a seeded run reproduces
+    under a different batch size and queue order."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    prompts = [P1, P2, P3]
+
+    def serve(batch_size, order):
+        reqs = [Request(prompt=prompts[i], max_new_tokens=4, temperature=0.8,
+                        rng_seed=i) for i in order]
+        Engine(cfg, params, max_len=32, batch_size=batch_size, seed=3).serve(reqs)
+        return {r.rng_seed: list(r.out_tokens) for r in reqs}
+
+    a = serve(3, [0, 1, 2])
+    b = serve(1, [2, 0, 1])
+    assert a == b
+    # a different engine seed shifts the sampled streams
+    reqs = [Request(prompt=P1, max_new_tokens=4, temperature=0.8, rng_seed=0)]
+    Engine(cfg, params, max_len=32, batch_size=1, seed=4).serve(reqs)
+    assert list(reqs[0].out_tokens) != a[0]
+
+
+def test_stop_token_ends_request():
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    ref = Request(prompt=P1, max_new_tokens=6)
+    Engine(cfg, params, max_len=32, batch_size=1).serve([ref])
+    eos = int(ref.out_tokens[2])  # force a stop on the 3rd greedy token
+
+    req = Request(prompt=P1, max_new_tokens=6, stop_tokens=(eos,))
+    Engine(cfg, params, max_len=32, batch_size=1).serve([req])
+    assert req.finish_reason == "stop"
+    np.testing.assert_array_equal(req.out_tokens, ref.out_tokens[:3])
+
+
+def test_cache_limit_returns_only_real_tokens():
+    """Regression for the wave-engine padding bug: when max_len truncates
+    decode, out_tokens holds exactly the generated tokens (no zero-pad) and
+    they match an untruncated run's prefix."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    full = Request(prompt=P1, max_new_tokens=12)
+    Engine(cfg, params, max_len=32, batch_size=1).serve([full])
+
+    trunc = Request(prompt=P1, max_new_tokens=12)
+    Engine(cfg, params, max_len=8, batch_size=1).serve([trunc])
+    cap = 8 - len(P1) + 1  # prefill token + writes up to max_len - 1
+    assert len(trunc.out_tokens) == cap < 12
+    assert trunc.finish_reason == "cache_limit"
+    np.testing.assert_array_equal(trunc.out_tokens, full.out_tokens[:cap])
+
+
+def test_wave_baseline_matches_continuous_outputs():
+    """Scheduling must not change tokens: the wave baseline and the slot
+    engine agree request-by-request (they differ only in admission timing)."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    rng = np.random.default_rng(2)
+    specs = [(rng.integers(0, cfg.vocab_size, size=n).astype(np.int32), m)
+             for n, m in ((5, 6), (2, 2), (3, 4), (6, 3), (1, 5))]
+    a = [Request(prompt=p, max_new_tokens=m) for p, m in specs]
+    b = [Request(prompt=p, max_new_tokens=m) for p, m in specs]
+    Engine(cfg, params, max_len=32, batch_size=2).serve(a)
+    WaveEngine(cfg, params, max_len=32, batch_size=2).serve(b)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.out_tokens, rb.out_tokens)
+        assert ra.finish_reason == rb.finish_reason
+
+
+def test_prefill_bucket_exactness_and_guard():
+    """Masked bucketed prefill (attention archs) must equal exact-length
+    prefill token-for-token; recurrent patterns must reject bucketing."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    exact = Request(prompt=P1, max_new_tokens=5)
+    Engine(cfg, params, max_len=32, batch_size=1,
+           prefill_bucket=1).serve([exact])
+    bucketed = Request(prompt=P1, max_new_tokens=5)
+    Engine(cfg, params, max_len=32, batch_size=1,
+           prefill_bucket=8).serve([bucketed])
+    np.testing.assert_array_equal(exact.out_tokens, bucketed.out_tokens)
+
+    _, hybrid = _params_and_cfg("jamba_1_5_large")
+    with pytest.raises(ValueError, match="pure-attention"):
+        Engine(hybrid, params, max_len=32, batch_size=1, prefill_bucket=8)
+
+
+def test_prompt_validation():
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    eng = Engine(cfg, params, max_len=8, batch_size=1)
+    with pytest.raises(ValueError):
+        eng.serve([Request(prompt=np.arange(9, dtype=np.int32))])
+    with pytest.raises(ValueError):
+        eng.serve([Request(prompt=P1, max_new_tokens=0)])
+    with pytest.raises(ValueError):
+        eng.serve([Request(prompt=P2, rng_seed=2**35)])
+
+
+def test_plan_batch_size_from_target():
+    _, cfg = _params_and_cfg("stablelm_1_6b")
+    b = plan_batch_size(cfg, 512, CPU_INTERPRET)
+    assert 1 <= b <= 64
+    # tighter memory -> fewer slots, never below one
+    tiny = dataclasses.replace(CPU_INTERPRET, hbm_words=1e4)
+    assert plan_batch_size(cfg, 512, tiny) == 1
+    # alignment: pools at/above the sublane multiple are rounded to it
+    if b >= CPU_INTERPRET.align_sublane:
+        assert b % CPU_INTERPRET.align_sublane == 0
+
+
+def test_slot_cache_ops_roundtrip():
+    """insert_cache_slot / reset_cache_slot splice batch-1 rows in and out
+    of a pooled cache (every leaf stacked (repeats, B, ...))."""
+    _, cfg = _params_and_cfg("jamba_1_5_large")  # attn + ssm leaves
+    pool = T.init_cache(cfg, 3, 8, dtype=jnp.float32)
+    row = jax.tree.map(lambda a: jnp.full_like(a[:, :1], 2.0),
+                       T.init_cache(cfg, 1, 8, dtype=jnp.float32))
+    pool = T.insert_cache_slot(pool, row, 1)
+    for leaf in jax.tree.leaves(pool):
+        np.testing.assert_array_equal(np.asarray(leaf[:, 1]), 2.0)
+        np.testing.assert_array_equal(np.asarray(leaf[:, 0]), 0.0)
+        np.testing.assert_array_equal(np.asarray(leaf[:, 2]), 0.0)
+    pool = T.reset_cache_slot(pool, 1)
+    for leaf in jax.tree.leaves(pool):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
