@@ -1,6 +1,8 @@
 """Wall-clock microbench of the LP-tiled Pallas kernels (interpret mode on
 CPU -> relative numbers only; the tiling decisions are the deliverable) and
-of the XLA paths used by the model stack."""
+of the XLA paths used by the model stack. Kernel calls route through the
+``repro.ops`` dispatch subsystem (ExecutionContext -> Backend -> kernel).
+"""
 
 from __future__ import annotations
 
@@ -9,10 +11,14 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import ops
 from repro.core.conv_model import Precision
-from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
 from repro.kernels.matmul import matmul as matmul_pallas
 from repro.plan import MatmulSpec, TPU_V5E, clear_plan_cache, plan
+
+XLA = ops.ExecutionContext(target=TPU_V5E, backend="xla")
+PALLAS = ops.ExecutionContext(target=TPU_V5E, backend="pallas")
 
 
 def _time(fn, *args, iters=3):
@@ -24,13 +30,49 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _gqa_rows(csv_rows: list, key) -> None:
+    """The dispatch layer's repeat-free GQA vs the old jnp.repeat wrapper.
+
+    The win is KV HBM traffic: repeat materializes H/Hkv copies of K and V
+    before the kernel streams them; group-folding streams the original
+    (B*Hkv, Lk, Dh) arrays. Wall time is interpret-mode (correctness path);
+    the modeled KV words are the communication-volume deliverable."""
+    B, H, Hkv, L, Dh = 1, 8, 2, 256, 64
+    q = jax.random.normal(key, (B, H, L, Dh), jnp.bfloat16) * 0.3
+    k = jax.random.normal(key, (B, Hkv, L, Dh), jnp.bfloat16) * 0.3
+    v = jax.random.normal(key, (B, Hkv, L, Dh), jnp.bfloat16)
+    kv_word = jnp.dtype(jnp.bfloat16).itemsize / 4.0
+
+    def repeat_path(q, k, v):  # the pre-dispatch wrapper, for comparison
+        rep = H // Hkv
+        kk = jnp.repeat(k, rep, axis=1).reshape(B * H, L, Dh)
+        vv = jnp.repeat(v, rep, axis=1).reshape(B * H, L, Dh)
+        return flash_attention(q.reshape(B * H, L, Dh), kk, vv,
+                               target=TPU_V5E).reshape(B, H, L, Dh)
+
+    def grouped_path(q, k, v):  # what ops.attention(ctx=pallas) dispatches
+        return ops.attention(q, k, v, ctx=PALLAS)
+
+    us_rep = _time(jax.jit(repeat_path), q, k, v)
+    us_grp = _time(jax.jit(grouped_path), q, k, v)
+    words_rep = 2 * B * H * L * Dh * kv_word  # K and V, repeated to H heads
+    words_grp = 2 * B * Hkv * L * Dh * kv_word
+    case = f"{B}x{H}h{Hkv}kv{L}x{Dh}"
+    csv_rows.append((f"kernel/attn_gqa_repeat/{case}", f"{us_rep:.0f}",
+                     f"kv_hbm_words={words_rep:.0f}"))
+    csv_rows.append((f"kernel/attn_gqa_grouped/{case}", f"{us_grp:.0f}",
+                     f"kv_hbm_words={words_grp:.0f} "
+                     f"({words_rep / words_grp:.0f}x less KV traffic, "
+                     f"{us_rep / us_grp:.2f}x wall)"))
+
+
 def run(csv_rows: list) -> None:
     key = jax.random.PRNGKey(0)
     # GEMM shapes from the LM stack (qwen QKV / olmoe expert / head slice)
     for (m, n, k) in ((512, 2048, 2048), (1024, 1024, 1024)):
         a = jax.random.normal(key, (m, k), jnp.bfloat16)
         b = jax.random.normal(key, (k, n), jnp.bfloat16)
-        us_x = _time(lambda x, y: ops.matmul(x, y, use_pallas=False), a, b)
+        us_x = _time(jax.jit(lambda x, y: ops.matmul(x, y, ctx=XLA)), a, b)
         flops = 2 * m * n * k
         csv_rows.append((f"kernel/matmul_xla/{m}x{n}x{k}", f"{us_x:.0f}",
                          f"gflops={flops / us_x / 1e3:.1f}"))
@@ -49,16 +91,19 @@ def run(csv_rows: list) -> None:
     # conv2d: ResNet conv3_x-like block at batch 8
     x = jax.random.normal(key, (8, 64, 30, 30), jnp.float32)
     w = jax.random.normal(key, (64, 64, 3, 3), jnp.float32)
-    us = _time(lambda a_, b_: ops.conv2d(a_, b_, use_pallas=False), x, w)
+    us = _time(jax.jit(lambda a_, b_: ops.conv2d(a_, b_, ctx=XLA)), x, w)
     csv_rows.append(("kernel/conv2d_xla/8x64x30", f"{us:.0f}", "oracle-path"))
-    us = _time(lambda a_, b_: ops.conv2d(a_, b_, use_pallas=True), x, w)
+    us = _time(jax.jit(lambda a_, b_: ops.conv2d(a_, b_, ctx=PALLAS)), x, w)
     csv_rows.append(("kernel/conv2d_pallas_interp/8x64x30", f"{us:.0f}",
                      "interpret=True (correctness mode, not perf)"))
     # conv1d causal (mamba short conv)
     x1 = jax.random.normal(key, (4, 512, 256), jnp.bfloat16)
     w1 = jax.random.normal(key, (4, 256), jnp.bfloat16)
-    us = _time(lambda a_, b_: ops.conv1d_causal(a_, b_, use_pallas=False), x1, w1)
+    us = _time(jax.jit(lambda a_, b_: ops.conv1d_causal(a_, b_, ctx=XLA)),
+               x1, w1)
     csv_rows.append(("kernel/conv1d_xla/4x512x256", f"{us:.0f}", ""))
+    # GQA dispatch: repeat-free group folding vs the old KV repeat
+    _gqa_rows(csv_rows, key)
 
 
 if __name__ == "__main__":

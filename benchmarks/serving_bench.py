@@ -4,7 +4,7 @@ baseline on a mixed workload (short + long prompts, heterogeneous
 keep-every-processor-busy argument.
 
 Both engines run the same corrected primitives and share compiled steps
-(``serving.engine._make_steps`` caches per (cfg, max_len, use_pallas)), so
+(``serving.engine._make_steps`` caches per (cfg, max_len, ctx)), so
 the measured difference is pure scheduling: the wave engine barriers a full
 batch until its slowest request drains, continuous batching refills freed
 slots mid-flight. A warmup pass populates the jit caches before timing.

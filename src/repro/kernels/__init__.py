@@ -3,7 +3,12 @@
 from ``repro.plan.plan``) or ``target=`` (a ``HardwareTarget``); the
 pre-redesign per-module planners (``plan_conv_tiles``, ``plan_tiles``) are
 retired. Validated against the pure-jnp oracles in ref.py with
-interpret=True on CPU."""
+interpret=True on CPU.
+
+Consumers should not call these modules directly: the ``repro.ops`` dispatch
+subsystem (ExecutionContext -> Backend -> kernel) routes each call to the
+right backend with capability fallback. ``kernels/ops.py`` is the deprecated
+``use_pallas=`` shim forwarding there for one PR."""
 
 from . import ops, ref  # noqa: F401
 from .conv1d import conv1d_causal  # noqa: F401

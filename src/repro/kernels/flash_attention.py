@@ -50,7 +50,8 @@ def attention_blocks(dh: int, target: HardwareTarget,
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   scale: float, causal: bool, block_q: int, block_k: int,
-                  n_k: int, q_offset: int, kv_len: int):
+                  n_k: int, q_offset: int, kv_len: int,
+                  q_seq_len: Optional[int]):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -69,8 +70,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     if kv_len % block_k != 0:  # padded keys: mask them out unconditionally
         s = jnp.where(kpos < kv_len, s, NEG_INF)
     if causal:
-        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + q_offset
-        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        qidx = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        if q_seq_len is not None:
+            # GQA group folding: row j of the flattened query axis is query
+            # j % q_seq_len of its group, so positions wrap per group.
+            qidx = qidx % q_seq_len
+        s = jnp.where(kpos <= qidx + q_offset, s, NEG_INF)
 
     m_prev = m_ref[...]
     l_prev = l_ref[...]
@@ -101,7 +106,12 @@ def flash_attention(
     block_k: Optional[int] = None,
     target: Optional[HardwareTarget] = None,
     interpret: Optional[bool] = None,
+    q_seq_len: Optional[int] = None,
 ) -> jax.Array:
+    """``q_seq_len``: set when the query axis folds GQA groups — q rows are g
+    groups of ``q_seq_len`` queries stacked, each group restarting at absolute
+    position ``q_offset`` (the repeat-free GQA path; K/V stay un-repeated at
+    (B*Hkv, Lk, Dh)). None = plain contiguous positions."""
     BH, Lq, Dh = q.shape
     Lk = k.shape[1]
     if block_q is None or block_k is None:
@@ -126,9 +136,12 @@ def flash_attention(
         v = jnp.pad(v, ((0, 0), (0, Lkp - Lk), (0, 0)))
     n_q, n_k = Lqp // bq, Lkp // bk
 
+    if q_seq_len is not None and q_seq_len >= Lq:
+        q_seq_len = None  # a single group degenerates to plain positions
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal,
         block_q=bq, block_k=bk, n_k=n_k, q_offset=q_offset, kv_len=Lk,
+        q_seq_len=q_seq_len,
     )
     out = pl.pallas_call(
         kernel,

@@ -1,77 +1,61 @@
-"""Public jit'd kernel wrappers.
+"""DEPRECATED shim — superseded by the ``repro.ops`` dispatch subsystem.
 
-Every op has two execution paths:
-  * ``xla``    - pure jnp/lax (used by default in the model stack so the same
-                 graph lowers on CPU, the dry-run's 512 fake devices, and real
-                 TPU without Pallas);
-  * ``pallas`` - the LP-tiled Pallas kernel (TPU target; interpret=True on
-                 CPU). Enabled via use_pallas=True or REPRO_USE_PALLAS=1.
+The ``use_pallas: bool`` switch is replaced by capability-based backend
+dispatch: build an :class:`repro.ops.ExecutionContext` (HardwareTarget +
+precision policy + backend override) and pass ``ctx=`` instead:
 
-The switch is an argument rather than global state so tests can sweep both
-paths and assert they agree.
+    from repro import ops
+    ops.matmul(a, b, ctx=ops.ExecutionContext(target=TPU_V5E))
+
+This module forwards the old signatures for one PR and will then be removed.
+Passing ``use_pallas=`` emits a ``DeprecationWarning``; ``use_pallas=None``
+defers to the new resolution order (``REPRO_BACKEND`` env var, then the
+context's target default).
 """
 
 from __future__ import annotations
 
-import functools
-import os
+import warnings
 
-import jax
 import jax.numpy as jnp
 
-from . import ref
-from .conv1d import conv1d_causal as _conv1d_pallas
-from .conv2d import conv2d as _conv2d_pallas
-from .flash_attention import flash_attention as _flash_pallas
-from .matmul import matmul as _matmul_pallas
+
+def _ctx(use_pallas):
+    from repro import ops as _ops
+
+    if use_pallas is None:
+        return None
+    warnings.warn(
+        "use_pallas= is deprecated; pass ctx=repro.ops.ExecutionContext(...) "
+        "(or set REPRO_BACKEND=xla|pallas)", DeprecationWarning, stacklevel=3)
+    return _ops.default_context().with_backend(
+        "pallas" if use_pallas else "xla")
 
 
-def _default_use_pallas() -> bool:
-    return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
-
-
-@functools.partial(jax.jit, static_argnames=("use_pallas", "out_dtype"))
 def matmul(a, b, use_pallas: bool | None = None, out_dtype=jnp.float32):
-    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
-    if use_pallas:
-        return _matmul_pallas(a, b, out_dtype=out_dtype)
-    return ref.matmul_ref(a, b, out_dtype=out_dtype)
+    from repro import ops as _ops
+
+    return _ops.matmul(a, b, ctx=_ctx(use_pallas), out_dtype=out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "use_pallas", "out_dtype"))
 def conv2d(x, w, stride=(1, 1), use_pallas: bool | None = None,
            out_dtype=jnp.float32):
-    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
-    if use_pallas:
-        return _conv2d_pallas(x, w, stride=stride, out_dtype=out_dtype)
-    return ref.conv2d_ref(x, w, stride=stride, out_dtype=out_dtype)
+    from repro import ops as _ops
+
+    return _ops.conv2d(x, w, stride=stride, ctx=_ctx(use_pallas),
+                       out_dtype=out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
 def conv1d_causal(x, w, use_pallas: bool | None = None):
-    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
-    if use_pallas:
-        return _conv1d_pallas(x, w)
-    return ref.conv1d_causal_ref(x, w)
+    from repro import ops as _ops
+
+    return _ops.conv1d_causal(x, w, ctx=_ctx(use_pallas))
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "q_offset", "use_pallas"))
 def attention(q, k, v, causal: bool = True, q_offset: int = 0,
               use_pallas: bool | None = None):
     """GQA attention, (B, H, L, Dh) layout; Hkv divides H."""
-    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
-    if not use_pallas:
-        return ref.flash_attention_ref(q, k, v, causal=causal, q_offset=q_offset)
-    B, H, Lq, Dh = q.shape
-    Hkv, Lk = k.shape[1], k.shape[2]
-    rep = H // Hkv
-    if rep > 1:
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
-    out = _flash_pallas(
-        q.reshape(B * H, Lq, Dh),
-        k.reshape(B * H, Lk, Dh),
-        v.reshape(B * H, Lk, Dh),
-        causal=causal, q_offset=q_offset,
-    )
-    return out.reshape(B, H, Lq, Dh)
+    from repro import ops as _ops
+
+    return _ops.attention(q, k, v, causal=causal, q_offset=q_offset,
+                          ctx=_ctx(use_pallas))

@@ -41,12 +41,17 @@ def main():
                     help="continuous batching (slot) or the wave baseline")
     ap.add_argument("--target", default="cpu_interpret",
                     help="hardware target preset (tpu_v5e | gemmini | "
-                         "cpu_interpret); decides the kernel path")
+                         "cpu_interpret); sets plan/precision policy and "
+                         "the default backend")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default=None,
+                    help="kernel backend override; default resolves from "
+                         "REPRO_BACKEND and then the --target preset")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
     from repro.configs import get_config, get_smoke
     from repro.models import transformer as T
+    from repro.ops import ExecutionContext
     from repro.plan import get_target
     from repro.serving.engine import Engine, Request, WaveEngine
     from repro.train import checkpoint as ckpt
@@ -70,9 +75,10 @@ def main():
                     stop_tokens=stop)
             for _ in range(args.requests)]
     cls = WaveEngine if args.engine == "wave" else Engine
+    target = get_target(args.target)
     eng = cls(cfg, params, max_len=args.max_len,
-              batch_size=args.batch or None,
-              target=get_target(args.target))
+              batch_size=args.batch or None, target=target,
+              ctx=ExecutionContext(target=target, backend=args.backend))
     t0 = time.time()
     eng.serve(reqs)
     dt = time.time() - t0

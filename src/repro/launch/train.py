@@ -33,10 +33,15 @@ def main():
     ap.add_argument("--data", default=None, help="token file (uint32)")
     ap.add_argument("--mesh", default=None,
                     help="e.g. '2,4' -> (data=2, model=4) over local devices")
-    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default=None,
+                    help="kernel backend override; default resolves from "
+                         "REPRO_BACKEND and then the --target preset")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="DEPRECATED: same as --backend pallas")
     ap.add_argument("--target", default=None,
                     help="hardware target preset (tpu_v5e | gemmini | "
-                         "cpu_interpret); implies its kernel path")
+                         "cpu_interpret); sets the plan/precision policy "
+                         "and the default backend")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--remat", action="store_true")
     args = ap.parse_args()
@@ -46,14 +51,25 @@ def main():
 
     from repro.configs import get_config, get_smoke
     from repro.data.pipeline import DataConfig
+    from repro.ops import ExecutionContext, default_context
     from repro.train.optimizer import AdamWConfig
     from repro.train.trainer import TrainConfig, Trainer
 
-    use_pallas = args.use_pallas
+    backend = args.backend
+    if args.use_pallas:
+        import warnings
+
+        warnings.warn("--use-pallas is deprecated; use --backend pallas",
+                      DeprecationWarning)
+        backend = backend or "pallas"
     if args.target:
         from repro.plan import get_target
 
-        use_pallas = use_pallas or get_target(args.target).use_pallas
+        ctx = ExecutionContext(target=get_target(args.target),
+                               backend=backend).resolved()
+    else:
+        ctx = default_context() if backend is None else \
+            default_context().with_backend(backend)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     mesh = None
@@ -67,7 +83,7 @@ def main():
                        total_steps=args.steps)
     tcfg = TrainConfig(steps=args.steps, microbatches=args.microbatches,
                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                       remat=args.remat, use_pallas=use_pallas,
+                       remat=args.remat, ctx=ctx,
                        compress_grads=args.compress_grads,
                        n_groups=max(1, np.gcd(args.batch * args.seq,
                                               len(jax.devices()))))

@@ -14,7 +14,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro import ops
+from repro.ops import ExecutionContext
 
 Params = Dict[str, jax.Array]
 
@@ -109,7 +110,7 @@ def attention_block(
     positions: jax.Array,  # (L,) or (B, L) absolute positions of x
     cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,KV,Lmax,hd) k, v
     cache_index: Optional[jax.Array] = None,  # scalar or (B,): write offset(s)
-    use_pallas: bool = False,
+    ctx: Optional[ExecutionContext] = None,
     attn_mask: Optional[jax.Array] = None,  # (B, L) True = real token
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """Returns (out, updated_cache). With a cache, keys/values are written at
@@ -120,7 +121,12 @@ def attention_block(
     masks row i's attention to ``kpos <= cache_index[i] + ...`` — the
     continuous-batching decode contract where every slot sits at its own
     depth. ``attn_mask`` marks padding tokens (False) so they are never
-    attended to, fixing left-padded batched prefill at the source."""
+    attended to, fixing left-padded batched prefill at the source.
+
+    ``ctx`` picks the attention backend via ``repro.ops`` dispatch: the
+    in-cache / masked variants need capabilities (traced or per-row
+    ``q_offset``, key masks) only the XLA entry declares, so a pallas
+    context falls back there by capability — no per-call-site ifs here."""
     B, L, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     cd = jnp.dtype(cfg.compute_dtype)
@@ -174,15 +180,8 @@ def attention_block(
 
     key_mask = _expand_key_mask(attn_mask, idx, L, k_att.shape[2],
                                 cached=cache is not None)
-    if use_pallas and cache is None and key_mask is None:
-        o = ops.attention(q, k_att, v_att, causal=cfg.causal,
-                          q_offset=0, use_pallas=True)
-    else:
-        # cache / masked paths run the jnp kernel: the flash kernel only
-        # understands a static scalar q_offset, not per-row offsets or pad
-        # masks. (interpret-mode Pallas is a correctness path anyway.)
-        o = _xla_attention(q, k_att, v_att, causal=cfg.causal,
-                           q_offset=q_offset, key_mask=key_mask)
+    o = ops.attention(q, k_att, v_att, causal=cfg.causal,
+                      q_offset=q_offset, key_mask=key_mask, ctx=ctx)
     o = o.transpose(0, 2, 1, 3).reshape(B, L, H * hd)
     out = jnp.einsum("blh,hd->bld", o, p["wo"].astype(cd)).astype(x.dtype)
     return out, new_cache
@@ -209,38 +208,6 @@ def _expand_key_mask(attn_mask, idx, L: int, Lk: int, cached: bool):
     in_window = (pos >= idx) & (pos < idx + L)
     return jnp.where(in_window, jnp.take_along_axis(attn_mask, col, axis=1),
                      True)
-
-
-def _xla_attention(q, k, v, causal: bool, q_offset, key_mask=None) -> jax.Array:
-    """jnp attention with GQA grouping kept factored (no KV repeat in HBM).
-
-    ``q_offset`` is the absolute position of the first query: a scalar for
-    lockstep batches or a (B,) vector when every row decodes at its own depth.
-    ``key_mask`` is an optional (B, Lk) validity mask over the keys."""
-    B, H, Lq, hd = q.shape
-    KV, Lk = k.shape[1], k.shape[2]
-    g = H // KV
-    qg = q.reshape(B, KV, g, Lq, hd)
-    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
-    logits = jnp.einsum("bkgqd,bkld->bkgql", qg.astype(jnp.float32),
-                        k.astype(jnp.float32)) * scale
-    mask = None
-    if causal:
-        off = jnp.asarray(q_offset, jnp.int32)
-        if off.ndim:
-            qpos = jnp.arange(Lq, dtype=jnp.int32)[None, :] + off[:, None]
-        else:
-            qpos = (jnp.arange(Lq, dtype=jnp.int32) + off)[None, :]
-        kpos = jnp.arange(Lk, dtype=jnp.int32)
-        mask = kpos[None, None, :] <= qpos[:, :, None]  # (B|1, Lq, Lk)
-    if key_mask is not None:
-        km = key_mask[:, None, :]  # (B, 1, Lk)
-        mask = km if mask is None else (mask & km)
-    if mask is not None:
-        logits = jnp.where(mask[:, None, None], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("bkgql,bkld->bkgqd", probs, v.astype(jnp.float32))
-    return o.reshape(B, H, Lq, hd).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -12,10 +12,12 @@ fall through the residual (standard token dropping).
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.ops import ExecutionContext
 
 from .layers import truncated_normal
 
@@ -46,8 +48,14 @@ def moe_block(
     x: jax.Array,  # (B, L, D)
     cfg,
     n_groups: int = 1,
+    ctx: Optional[ExecutionContext] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (out, aux_loss). aux_loss is the load-balancing loss."""
+    """Returns (out, aux_loss). aux_loss is the load-balancing loss.
+
+    ``ctx`` is the stack-wide execution policy; the grouped expert einsums
+    have no dispatched kernel entry yet, so it is accepted for API
+    uniformity with the other blocks."""
+    del ctx
     B, L, D = x.shape
     E, K = cfg.n_experts, cfg.experts_per_token
     cd = jnp.dtype(cfg.compute_dtype)

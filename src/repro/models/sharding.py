@@ -49,6 +49,54 @@ def gemm_sharding_plan(m: int, n: int, k: int, mesh: Mesh):
             P(*sp.output_spec[:2]))
 
 
+def static_rule_gemms(cfg: ModelConfig, tokens: int = 65536):
+    """The static rule tables below, re-expressed as the GEMMs they shard.
+
+    Yields ``(name, (m, n, k), weight_spec)`` for every two-axis weight GEMM
+    in the transformer stack: ``m`` = tokens, ``(k, n)`` = the weight shape,
+    ``weight_spec`` = the hand-written PartitionSpec from the tables. This is
+    the contract ``tests/test_sharding_rules.py`` verifies against the
+    dynamic LP path (``gemm_sharding_plan``) — if the tables and the LP ever
+    diverge, that test fails loudly instead of production silently running a
+    non-LP sharding."""
+    D = cfg.d_model
+    out = []
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "attn":
+            a = _attn_specs(cfg)
+            H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            out += [("attn.wq", (tokens, H * hd, D), a["wq"]),
+                    ("attn.wk", (tokens, KV * hd, D), a["wk"]),
+                    ("attn.wv", (tokens, KV * hd, D), a["wv"]),
+                    ("attn.wo", (tokens, D, H * hd), a["wo"])]
+        elif kind == "mamba":
+            m = _mamba_specs()
+            out += [("mamba.w_in", (tokens, 2 * cfg.d_inner, D), m["w_in"]),
+                    ("mamba.w_out", (tokens, D, cfg.d_inner), m["w_out"])]
+        elif kind == "mlstm":
+            m = _mlstm_specs()
+            out += [("mlstm.wq", (tokens, D, D), m["wq"]),
+                    ("mlstm.wo", (tokens, D, D), m["wo"])]
+        elif kind == "slstm":
+            s = _slstm_specs()
+            out += [("slstm.w_zifo", (tokens, 4 * D, D), s["w_zifo"]),
+                    ("slstm.wo", (tokens, D, D), s["wo"])]
+        from .transformer import _has_ffn, _is_moe
+        if _has_ffn(cfg, i) and not _is_moe(cfg, i):
+            f = _mlp_specs()
+            out += [("mlp.w_gate", (tokens, cfg.d_ff, D), f["w_gate"]),
+                    ("mlp.w_down", (tokens, D, cfg.d_ff), f["w_down"])]
+    out.append(("head", (tokens, cfg.padded_vocab, D),
+                param_specs(cfg)["head"]))
+    # dedup repeated pattern positions: one check per distinct GEMM
+    seen, uniq = set(), []
+    for name, mnk, spec in out:
+        if (name, mnk) not in seen:
+            seen.add((name, mnk))
+            uniq.append((name, mnk, spec))
+    return uniq
+
+
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
 

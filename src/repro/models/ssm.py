@@ -23,7 +23,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro import ops
+from repro.ops import ExecutionContext
 from .layers import truncated_normal
 from .scan_util import scan as _scan
 
@@ -56,7 +57,7 @@ def _heads(cfg) -> Tuple[int, int]:
     return H, di // H
 
 
-def _ssm_inputs(p: Params, x: jax.Array, cfg, use_pallas: bool):
+def _ssm_inputs(p: Params, x: jax.Array, cfg, ctx: Optional[ExecutionContext]):
     """Shared front: in-proj, causal conv, gate projections.
 
     Returns xh (B,L,H,ph), z (B,L,di), loga (B,L,H), dt (B,L,H),
@@ -65,7 +66,7 @@ def _ssm_inputs(p: Params, x: jax.Array, cfg, use_pallas: bool):
     H, ph = _heads(cfg)
     xz = jnp.einsum("bld,de->ble", x.astype(cd), p["w_in"].astype(cd))
     xi, z = jnp.split(xz, 2, axis=-1)
-    xi = ops.conv1d_causal(xi, p["conv_w"].astype(cd), use_pallas=use_pallas)
+    xi = ops.conv1d_causal(xi, p["conv_w"].astype(cd), ctx=ctx)
     xi = jax.nn.silu(xi.astype(jnp.float32)).astype(cd)
     dt = jax.nn.softplus(
         jnp.einsum("bld,dh->blh", xi, p["w_dt"].astype(cd)).astype(jnp.float32)
@@ -84,14 +85,14 @@ def mamba_block(
     x: jax.Array,  # (B, L, D)
     cfg,
     state: Optional[Tuple[jax.Array, jax.Array]] = None,  # (ssm h, conv tail)
-    use_pallas: bool = False,
+    ctx: Optional[ExecutionContext] = None,
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """Full-sequence (train/prefill) mamba block; chunked SSD scan."""
     B, L, D = x.shape
     H, ph = _heads(cfg)
     S = cfg.ssm_state_dim
     cd = jnp.dtype(cfg.compute_dtype)
-    xh, xi, z, loga, dt, Bm, Cm = _ssm_inputs(p, x, cfg, use_pallas)
+    xh, xi, z, loga, dt, Bm, Cm = _ssm_inputs(p, x, cfg, ctx)
 
     c = min(cfg.chunk_size, L)
     if L % c != 0:  # pad to a whole number of chunks
@@ -151,7 +152,7 @@ def mamba_decode_step(
     x: jax.Array,  # (B, 1, D)
     cfg,
     state: Tuple[jax.Array, jax.Array],  # h (B,H,ph,S), conv tail (B,K-1,di)
-    use_pallas: bool = False,
+    ctx: Optional[ExecutionContext] = None,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     B = x.shape[0]
     H, ph = _heads(cfg)
@@ -203,7 +204,8 @@ def mamba_block_ref(p: Params, x: jax.Array, cfg) -> jax.Array:
     H, ph = _heads(cfg)
     S = cfg.ssm_state_dim
     cd = jnp.dtype(cfg.compute_dtype)
-    xh, xi, z, loga, dt, Bm, Cm = _ssm_inputs(p, x, cfg, use_pallas=False)
+    xh, xi, z, loga, dt, Bm, Cm = _ssm_inputs(
+        p, x, cfg, ctx=ops.default_context().with_backend("xla"))
 
     def step(h, inp):
         xt, lat, Bt, Ct = inp  # (B,H,ph), (B,H), (B,S), (B,S)

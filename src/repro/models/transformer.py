@@ -20,6 +20,8 @@ import jax.numpy as jnp
 
 from .scan_util import scan as _scan
 
+from repro.ops import ExecutionContext
+
 from . import moe as moe_lib
 from . import ssm, xlstm
 from .config import ModelConfig
@@ -153,8 +155,8 @@ def cache_footprint_words(cfg: ModelConfig, max_len: int,
 # ---------------------------------------------------------------------------
 
 def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
-                  cache_index, n_groups: int, use_pallas: bool, decode: bool,
-                  attn_mask=None):
+                  cache_index, n_groups: int, ctx: Optional[ExecutionContext],
+                  decode: bool, attn_mask=None):
     """One pattern unit; returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, PyTree] = {}
@@ -171,8 +173,7 @@ def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
                 cache = (bc["k"], bc["v"])
             out, upd = attention_block(blk["core"], h, cfg, positions,
                                        cache=cache, cache_index=cache_index,
-                                       use_pallas=use_pallas,
-                                       attn_mask=attn_mask)
+                                       ctx=ctx, attn_mask=attn_mask)
             if upd is not None:
                 new_cache[f"b{i}"] = ({"kv": upd[0]} if cfg.fused_kv_cache
                                       else {"k": upd[0], "v": upd[1]})
@@ -180,33 +181,38 @@ def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
             state = (bc["h"], bc["tail"]) if bc is not None else None
             if decode:
                 out, upd = ssm.mamba_decode_step(blk["core"], h, cfg, state,
-                                                 use_pallas=use_pallas)
+                                                 ctx=ctx)
             else:
                 out, upd = ssm.mamba_block(blk["core"], h, cfg, state,
-                                           use_pallas=use_pallas)
+                                           ctx=ctx)
             if upd is not None:
                 new_cache[f"b{i}"] = {"h": upd[0], "tail": upd[1]}
         elif kind == "mlstm":
             state = (bc["C"], bc["n"]) if bc is not None else None
             if decode:
-                out, upd = xlstm.mlstm_decode_step(blk["core"], h, cfg, state)
+                out, upd = xlstm.mlstm_decode_step(blk["core"], h, cfg, state,
+                                                   ctx=ctx)
             else:
-                out, upd = xlstm.mlstm_block(blk["core"], h, cfg, state)
+                out, upd = xlstm.mlstm_block(blk["core"], h, cfg, state,
+                                             ctx=ctx)
             if upd is not None:
                 new_cache[f"b{i}"] = {"C": upd[0], "n": upd[1]}
         elif kind == "slstm":
             state = (bc["c"], bc["n"]) if bc is not None else None
             if decode:
-                out, upd = xlstm.slstm_decode_step(blk["core"], h, cfg, state)
+                out, upd = xlstm.slstm_decode_step(blk["core"], h, cfg, state,
+                                                   ctx=ctx)
             else:
-                out, upd = xlstm.slstm_block(blk["core"], h, cfg, state)
+                out, upd = xlstm.slstm_block(blk["core"], h, cfg, state,
+                                             ctx=ctx)
             if upd is not None:
                 new_cache[f"b{i}"] = {"c": upd[0], "n": upd[1]}
         x = x + out
         if _has_ffn(cfg, i):
             h = rms_norm(x, blk["norm2"], cfg.norm_eps)
             if _is_moe(cfg, i):
-                f, a = moe_lib.moe_block(blk["ffn"], h, cfg, n_groups=n_groups)
+                f, a = moe_lib.moe_block(blk["ffn"], h, cfg,
+                                         n_groups=n_groups, ctx=ctx)
                 aux = aux + a
             else:
                 f = mlp(blk["ffn"], h, jnp.dtype(cfg.compute_dtype))
@@ -222,7 +228,7 @@ def hidden_forward(
     cache: Optional[PyTree] = None,
     cache_index: Optional[jax.Array] = None,
     n_groups: int = 1,
-    use_pallas: bool = False,
+    ctx: Optional[ExecutionContext] = None,
     remat: bool = False,
     decode: bool = False,
     act_spec=None,  # PartitionSpec for (B, L, D) activations (seq parallel)
@@ -230,6 +236,11 @@ def hidden_forward(
     positions: Optional[jax.Array] = None,  # (L,) or (B, L) RoPE positions
 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     """Backbone only: returns (final-norm hidden states, new_cache, aux).
+
+    ``ctx`` is the execution policy (``repro.ops.ExecutionContext``): which
+    backend serves each kernel call, planned against which HardwareTarget,
+    at which precision. ``None`` resolves the default (XLA unless
+    ``REPRO_BACKEND`` says otherwise).
 
     ``cache_index`` may be a scalar (all rows at one depth: training, lockstep
     prefill) or a (B,) vector (each row at its own depth: continuous-batching
@@ -263,8 +274,7 @@ def hidden_forward(
     x = constrain(x)
     body_fn = functools.partial(
         _unit_forward, cfg=cfg, positions=positions, cache_index=cache_index,
-        n_groups=n_groups, use_pallas=use_pallas, decode=decode,
-        attn_mask=attn_mask)
+        n_groups=n_groups, ctx=ctx, decode=decode, attn_mask=attn_mask)
 
     def scan_body(carry, xs):
         x, aux = carry
@@ -293,7 +303,7 @@ def forward(
     cache: Optional[PyTree] = None,
     cache_index: Optional[jax.Array] = None,
     n_groups: int = 1,
-    use_pallas: bool = False,
+    ctx: Optional[ExecutionContext] = None,
     remat: bool = False,
     decode: bool = False,
     act_spec=None,
@@ -303,7 +313,7 @@ def forward(
     """Returns (logits, new_cache, aux_loss)."""
     x, new_cache, aux = hidden_forward(
         params, cfg, tokens=tokens, embeds=embeds, cache=cache,
-        cache_index=cache_index, n_groups=n_groups, use_pallas=use_pallas,
+        cache_index=cache_index, n_groups=n_groups, ctx=ctx,
         remat=remat, decode=decode, act_spec=act_spec, attn_mask=attn_mask,
         positions=positions)
     logits = lm_logits(params["head"], x, jnp.dtype(cfg.compute_dtype))
@@ -372,13 +382,13 @@ def chunked_next_token_loss(params, cfg: ModelConfig, x: jax.Array,
 
 
 def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
-            n_groups: int = 1, use_pallas: bool = False,
+            n_groups: int = 1, ctx: Optional[ExecutionContext] = None,
             remat: bool = False, aux_weight: float = 0.01,
             loss_chunks: int = 0, act_spec=None):
     if loss_chunks > 1 and cfg.causal and "tokens" in batch:
         x, _, aux = hidden_forward(
             params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
-            n_groups=n_groups, use_pallas=use_pallas, remat=remat,
+            n_groups=n_groups, ctx=ctx, remat=remat,
             act_spec=act_spec)
         loss = chunked_next_token_loss(params, cfg, x, batch["tokens"],
                                        loss_chunks)
@@ -387,7 +397,7 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
         params, cfg,
         tokens=batch.get("tokens"),
         embeds=batch.get("embeds"),
-        n_groups=n_groups, use_pallas=use_pallas, remat=remat,
+        n_groups=n_groups, ctx=ctx, remat=remat,
         act_spec=act_spec)
     if cfg.causal and "tokens" in batch:
         loss = next_token_loss(logits, batch["tokens"])

@@ -19,6 +19,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.ops import ExecutionContext
+
 from .layers import truncated_normal
 from .scan_util import scan as _scan
 
@@ -72,7 +74,12 @@ def mlstm_block(
     x: jax.Array,  # (B, L, D)
     cfg,
     state: Optional[Tuple[jax.Array, jax.Array]] = None,  # C (B,H,hd,hd), n (B,H,hd)
+    ctx: Optional[ExecutionContext] = None,
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """``ctx`` is the execution policy every block in the stack accepts;
+    the chunked-dual einsums currently have no dispatched kernel entry, so
+    it is carried for API uniformity (and future backend entries)."""
+    del ctx  # no dispatched kernels in the chunked-dual form yet
     B, L, D = x.shape
     H = cfg.n_heads
     hd = D // H
@@ -137,7 +144,9 @@ def mlstm_block(
 
 
 def mlstm_decode_step(p: Params, x: jax.Array, cfg,
-                      state: Tuple[jax.Array, jax.Array]):
+                      state: Tuple[jax.Array, jax.Array],
+                      ctx: Optional[ExecutionContext] = None):
+    del ctx  # see mlstm_block
     B = x.shape[0]
     H = cfg.n_heads
     hd = cfg.d_model // H
@@ -220,7 +229,9 @@ def slstm_block(
     x: jax.Array,
     cfg,
     state: Optional[Tuple[jax.Array, jax.Array]] = None,  # c (B,D), n (B,D)
+    ctx: Optional[ExecutionContext] = None,
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    del ctx  # associative-scan form has no dispatched kernel entry yet
     B, L, D = x.shape
     cd = jnp.dtype(cfg.compute_dtype)
     z, i, f, o = _slstm_gates(p, x, cfg)
@@ -248,7 +259,9 @@ def slstm_block(
 
 
 def slstm_decode_step(p: Params, x: jax.Array, cfg,
-                      state: Tuple[jax.Array, jax.Array]):
+                      state: Tuple[jax.Array, jax.Array],
+                      ctx: Optional[ExecutionContext] = None):
+    del ctx  # see slstm_block
     z, i, f, o = _slstm_gates(p, x, cfg)  # (B,1,D)
     c_prev, n_prev = (s.astype(jnp.float32) for s in state)
     c = f[:, 0] * c_prev + i[:, 0] * z[:, 0]

@@ -1,0 +1,61 @@
+"""``repro.ops`` — backend-registry op dispatch (ExecutionContext -> Backend
+-> kernel).
+
+The execution-layer counterpart of ``repro.plan``: where ``plan`` decides
+*how* an op is tiled/sharded for a HardwareTarget, ``ops`` decides *which
+implementation runs* — a per-(op, target) decision, matching the paper's
+premise that mixed-precision word sizes change the Thm 2.1 bound and
+therefore the optimal execution strategy.
+
+    from repro import ops
+    from repro.ops import ExecutionContext
+    from repro.plan import TPU_V5E
+
+    ctx = ExecutionContext(target=TPU_V5E)           # -> pallas by default
+    y = ops.attention(q, k, v, ctx=ctx)              # flash kernel, LP blocks
+    y = ops.attention(q, k, v, q_offset=idx, ctx=ctx)  # falls back to masked
+                                                       # XLA *by capability*
+    ops.explain("attention", ctx, needs=("key_mask",)).chosen  # -> "xla"
+
+Backends are registered in ``repro.ops.registry`` (``xla``, ``pallas``); each
+op entry declares capabilities (accepted dtypes, per-row ``q_offset``, key
+masks) and the dispatcher walks the fallback chain until one covers the call.
+``ExecutionContext`` carries the HardwareTarget (precision policy + plan
+cache handle), an optional backend override, and the Pallas interpret flag —
+it supersedes the ``use_pallas`` booleans that used to thread through the
+model stack. Backend selection from the environment: ``REPRO_BACKEND=xla|
+pallas`` (``REPRO_USE_PALLAS=1`` still honored, deprecated).
+
+``kernels/ops.py`` remains as a one-PR deprecation shim forwarding
+``use_pallas=`` calls here.
+"""
+
+from .context import (  # noqa: F401
+    BACKEND_ENV,
+    LEGACY_BACKEND_ENV,
+    ExecutionContext,
+    default_context,
+    dtype_for_words,
+    env_backend,
+)
+from .dispatch import (  # noqa: F401
+    DispatchDecision,
+    attention,
+    attention_needs,
+    conv1d_causal,
+    conv2d,
+    explain,
+    matmul,
+    record_dispatch,
+    resolve,
+)
+from .registry import (  # noqa: F401
+    Backend,
+    OpCapabilities,
+    OpEntry,
+    backends,
+    get_backend,
+    register_backend,
+    registered_ops,
+    xla_attention,
+)

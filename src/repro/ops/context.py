@@ -1,0 +1,134 @@
+"""ExecutionContext: the single execution-policy object threaded through the
+model stack.
+
+The paper's premise is that the *same* op should execute differently per
+target — mixed-precision word sizes change the Thm 2.1 bound and therefore the
+optimal tiling — so "which implementation runs, with which tiles, at which
+precision" is a per-(op, target) decision. ``ExecutionContext`` bundles the
+three inputs of that decision:
+
+  * ``target``  - the :class:`repro.plan.HardwareTarget` whose memory model the
+                  blocking LP plans against and whose ``precision`` policy sets
+                  stream/accumulator dtypes;
+  * ``backend`` - an explicit backend override (``"xla"`` | ``"pallas"``).
+                  ``None`` defers to the ``REPRO_BACKEND`` environment variable
+                  and then to the target's own default;
+  * ``interpret`` - Pallas interpret-mode override (``None`` = the target's).
+
+Plans are resolved through the process-wide memoized cache in
+``repro.plan.planner`` (``ctx.plan(op)`` is the cache handle), so every
+consumer of one context converges on identical ``ExecutionPlan`` objects.
+
+Backend resolution order: explicit ``ctx.backend`` > ``REPRO_BACKEND`` env var
+> the target default. The retired ``REPRO_USE_PALLAS=1`` env var is still
+honored with a ``DeprecationWarning``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.plan import HardwareTarget, TPU_V5E
+
+BACKEND_ENV = "REPRO_BACKEND"
+LEGACY_BACKEND_ENV = "REPRO_USE_PALLAS"
+
+# Paper word-widths (units of 32-bit words) -> jnp dtypes. The precision
+# policy of a HardwareTarget speaks words; kernels speak dtypes.
+_WORD_DTYPES = {1.0: jnp.float32, 0.5: jnp.bfloat16, 0.25: jnp.int8}
+
+
+def dtype_for_words(words: float):
+    """The jnp dtype of a paper word-width (1.0 -> f32, 0.5 -> bf16, ...)."""
+    try:
+        return _WORD_DTYPES[float(words)]
+    except KeyError:
+        raise ValueError(f"no dtype for precision {words} words; "
+                         f"known: {sorted(_WORD_DTYPES)}")
+
+
+def env_backend() -> Optional[str]:
+    """Backend requested via the environment, or None.
+
+    ``REPRO_BACKEND=xla|pallas`` is the supported knob; the retired
+    ``REPRO_USE_PALLAS=0|1`` is honored with a DeprecationWarning."""
+    name = os.environ.get(BACKEND_ENV)
+    if name:
+        name = name.strip().lower()
+        if name not in ("xla", "pallas"):
+            raise ValueError(
+                f"{BACKEND_ENV}={name!r} is not a known backend "
+                "(expected 'xla' or 'pallas')")
+        return name
+    legacy = os.environ.get(LEGACY_BACKEND_ENV)
+    if legacy is not None:
+        warnings.warn(
+            f"{LEGACY_BACKEND_ENV} is deprecated; set {BACKEND_ENV}="
+            "xla|pallas instead", DeprecationWarning, stacklevel=2)
+        return "pallas" if legacy == "1" else "xla"
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionContext:
+    """HardwareTarget + precision policy + backend override + plan handle.
+
+    Frozen and hashable so it can key jit static arguments and the serving
+    engine's compiled-step cache, exactly as the old ``use_pallas`` bool did.
+    """
+
+    target: HardwareTarget = TPU_V5E
+    backend: Optional[str] = None  # "xla" | "pallas" | None (resolve)
+    interpret: Optional[bool] = None  # Pallas interpret override
+
+    # -- backend resolution ---------------------------------------------------
+    def resolved_backend(self) -> str:
+        if self.backend is not None:
+            return self.backend
+        return env_backend() or ("pallas" if self.target.use_pallas else "xla")
+
+    def resolved(self) -> "ExecutionContext":
+        """Pin the backend choice (env var read once, here) so the context
+        can key long-lived caches without depending on ambient state."""
+        return dataclasses.replace(self, backend=self.resolved_backend())
+
+    # -- builders -------------------------------------------------------------
+    def with_backend(self, name: Optional[str]) -> "ExecutionContext":
+        return dataclasses.replace(self, backend=name)
+
+    @classmethod
+    def from_target(cls, target: HardwareTarget,
+                    backend: Optional[str] = None) -> "ExecutionContext":
+        return cls(target=target, backend=backend)
+
+    # -- plan-cache handle ----------------------------------------------------
+    def plan(self, op):
+        """Resolve the ExecutionPlan for ``op`` on this context's target via
+        the process-wide memoized plan cache (``repro.plan.plan``)."""
+        from repro.plan import plan as _plan
+
+        return _plan(op, self.target)
+
+    # -- precision policy -----------------------------------------------------
+    @property
+    def stream_dtype(self):
+        """Input/filter stream dtype from the target's precision policy."""
+        return dtype_for_words(self.target.precision.p_I)
+
+    @property
+    def acc_dtype(self):
+        """Output/accumulator dtype from the target's precision policy (the
+        default ``out_dtype`` of every dispatched op)."""
+        return dtype_for_words(self.target.precision.p_O)
+
+
+def default_context() -> ExecutionContext:
+    """The context used when a consumer passes ``ctx=None``: plans against
+    ``TPU_V5E`` (the pre-redesign kernel default) but executes on XLA unless
+    ``REPRO_BACKEND``/``REPRO_USE_PALLAS`` asks for Pallas."""
+    return ExecutionContext(target=TPU_V5E, backend=env_backend() or "xla")

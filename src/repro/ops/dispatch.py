@@ -1,0 +1,197 @@
+"""The dispatcher: resolve each op call to (ExecutionPlan, backend kernel).
+
+``resolve(op, ctx, ...)`` walks the requested backend's fallback chain until
+an entry's declared capabilities cover the call's required features, solves
+the LP plan for entries that declare a ``spec_fn`` (through the context's
+process-wide plan cache), and returns a :class:`DispatchDecision` — the
+explain/trace record tests and tools assert against.
+
+The public op wrappers (``matmul``/``conv2d``/``conv1d_causal``/``attention``)
+derive the required features from the call itself (is ``q_offset`` a static
+int, a traced scalar, or a per-row vector? is there a key mask?) so callers
+never re-implement the capability logic. Dispatch happens at trace time:
+inside ``jax.jit`` the decision is made once per compiled variant.
+
+Observability:
+
+  * ``explain(op, ctx, ...)``    - the decision, without executing anything;
+  * ``record_dispatch()``        - context manager capturing every decision
+                                   made while it is active (including those
+                                   made while tracing a jit).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from .context import ExecutionContext, default_context
+from .registry import OpEntry, get_backend
+
+MAX_FALLBACK_DEPTH = 4  # registry misconfiguration guard, not a real limit
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchDecision:
+    """Why one call ran where it did.
+
+    ``requested`` is the backend the context resolved to; ``chosen`` the one
+    that actually served the call; ``missing`` the capabilities whose absence
+    forced each fallback hop (empty when ``chosen == requested``); ``plan``
+    the ExecutionPlan the chosen entry consumed (None for closed-form ops and
+    for XLA entries, which delegate tiling to the compiler)."""
+
+    op: str
+    requested: str
+    chosen: str
+    missing: Tuple[str, ...] = ()
+    plan: Optional[Any] = None
+
+    @property
+    def fell_back(self) -> bool:
+        return self.chosen != self.requested
+
+    def why(self) -> str:
+        if not self.fell_back:
+            return f"{self.op}: ran on requested backend {self.chosen!r}"
+        return (f"{self.op}: {self.requested!r} lacks "
+                f"{', '.join(self.missing)}; fell back to {self.chosen!r}")
+
+
+_TRACE: List[List[DispatchDecision]] = []  # stack of active recorders
+
+
+@contextlib.contextmanager
+def record_dispatch():
+    """Capture every DispatchDecision made while active (trace API)."""
+    log: List[DispatchDecision] = []
+    _TRACE.append(log)
+    try:
+        yield log
+    finally:
+        # remove by identity: nested recorders hold equal (e.g. empty) lists
+        for i, entry in enumerate(_TRACE):
+            if entry is log:
+                del _TRACE[i]
+                break
+
+
+def _resolve_entry(op: str, ctx: ExecutionContext, dtype: Optional[str],
+                   needs: Tuple[str, ...]
+                   ) -> Tuple[OpEntry, DispatchDecision]:
+    requested = ctx.resolved_backend()
+    name: Optional[str] = requested
+    missing: Tuple[str, ...] = ()
+    for _ in range(MAX_FALLBACK_DEPTH):
+        if name is None:
+            break
+        backend = get_backend(name)
+        entry = backend.ops.get(op)
+        lacks = (f"op:{op}",) if entry is None else entry.caps.missing(
+            dtype=dtype, needs=needs)
+        if not lacks:
+            decision = DispatchDecision(op=op, requested=requested,
+                                        chosen=name, missing=missing)
+            return entry, decision
+        missing = missing + lacks
+        name = backend.fallback
+    raise NotImplementedError(
+        f"no registered backend can serve op {op!r} "
+        f"(requested {requested!r}, dtype={dtype}, needs={needs}; "
+        f"missing along the fallback chain: {missing})")
+
+
+def resolve(op: str, ctx: Optional[ExecutionContext] = None,
+            dtype: Optional[str] = None, needs: Tuple[str, ...] = (),
+            spec_args: Optional[tuple] = None, spec_kw: Optional[dict] = None
+            ) -> Tuple[OpEntry, DispatchDecision]:
+    """Capability-resolve one call; solve the entry's LP plan if it has one."""
+    ctx = default_context() if ctx is None else ctx
+    entry, decision = _resolve_entry(op, ctx, dtype, tuple(needs))
+    if entry.spec_fn is not None and spec_args is not None:
+        plan = ctx.plan(entry.spec_fn(*spec_args, **(spec_kw or {})))
+        decision = dataclasses.replace(decision, plan=plan)
+    for log in _TRACE:
+        log.append(decision)
+    return entry, decision
+
+
+def explain(op: str, ctx: Optional[ExecutionContext] = None,
+            dtype: Optional[str] = None, needs: Tuple[str, ...] = (),
+            spec_args: Optional[tuple] = None,
+            spec_kw: Optional[dict] = None) -> DispatchDecision:
+    """The decision ``resolve`` would make, without executing anything.
+    ``spec_args``/``spec_kw`` mirror ``resolve`` so the reported plan is the
+    one the dispatched kernel would consume (e.g. conv2d needs stride=)."""
+    ctx = default_context() if ctx is None else ctx
+    entry, decision = _resolve_entry(op, ctx, dtype, tuple(needs))
+    if entry.spec_fn is not None and spec_args is not None:
+        decision = dataclasses.replace(
+            decision, plan=ctx.plan(entry.spec_fn(*spec_args,
+                                                  **(spec_kw or {}))))
+    return decision
+
+
+# ---------------------------------------------------------------------------
+# Public ops. Feature extraction happens here, once, for every caller.
+# ---------------------------------------------------------------------------
+
+def _is_static_int(v) -> bool:
+    return isinstance(v, (int, np.integer))
+
+
+def matmul(a, b, ctx: Optional[ExecutionContext] = None, out_dtype=None):
+    """C[m,n] = A @ B through the dispatched backend; ``out_dtype`` defaults
+    to the target precision policy's accumulator dtype."""
+    ctx = default_context() if ctx is None else ctx
+    entry, dec = resolve("matmul", ctx, dtype=str(a.dtype), spec_args=(a, b))
+    return entry.fn(ctx, dec.plan, a, b,
+                    out_dtype=out_dtype or ctx.acc_dtype)
+
+
+def conv2d(x, w, stride=(1, 1), ctx: Optional[ExecutionContext] = None,
+           out_dtype=None):
+    """Direct 7NL convolution (VALID padding) through the dispatched backend."""
+    ctx = default_context() if ctx is None else ctx
+    entry, dec = resolve("conv2d", ctx, dtype=str(x.dtype),
+                         spec_args=(x, w), spec_kw={"stride": stride})
+    return entry.fn(ctx, dec.plan, x, w, stride=stride,
+                    out_dtype=out_dtype or ctx.acc_dtype)
+
+
+def conv1d_causal(x, w, ctx: Optional[ExecutionContext] = None):
+    """Causal depthwise conv1d (the mamba/xLSTM short convolution)."""
+    ctx = default_context() if ctx is None else ctx
+    entry, dec = resolve("conv1d_causal", ctx, dtype=str(x.dtype))
+    return entry.fn(ctx, dec.plan, x, w)
+
+
+def attention_needs(q_offset=0, key_mask=None) -> Tuple[str, ...]:
+    """Required capability flags of one attention call (shared with tests)."""
+    needs = []
+    if not _is_static_int(q_offset):
+        needs.append("per_row_q_offset" if getattr(q_offset, "ndim", 0)
+                     else "dynamic_q_offset")
+    if key_mask is not None:
+        needs.append("key_mask")
+    return tuple(needs)
+
+
+def attention(q, k, v, causal: bool = True, q_offset=0, key_mask=None,
+              ctx: Optional[ExecutionContext] = None):
+    """GQA attention, (B, H, L, Dh) layout; Hkv divides H.
+
+    ``q_offset``: absolute position of the first query — a static python int
+    (train/prefill), a traced scalar (lockstep decode), or a (B,) vector
+    (continuous-batching decode, every slot at its own depth). ``key_mask``
+    is an optional (B, Lk) validity mask over the keys (padded prefill).
+    Backends that cannot serve the traced/masked variants (the Pallas flash
+    kernel) fall back by declared capability."""
+    ctx = default_context() if ctx is None else ctx
+    entry, dec = resolve("attention", ctx, dtype=str(q.dtype),
+                         needs=attention_needs(q_offset, key_mask))
+    return entry.fn(ctx, dec.plan, q, k, v, causal=causal,
+                    q_offset=q_offset, key_mask=key_mask)

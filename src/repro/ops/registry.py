@@ -1,0 +1,301 @@
+"""Backend registry: named backends, per-op entries, declared capabilities.
+
+A :class:`Backend` is a table ``op name -> OpEntry``; each entry carries the
+kernel adapter plus an :class:`OpCapabilities` declaring what call shapes it
+can serve (accepted dtypes and feature flags such as ``per_row_q_offset`` or
+``key_mask``). The dispatcher (``repro.ops.dispatch``) walks the requested
+backend's fallback chain until an entry's capabilities cover the call — this
+replaces the ad-hoc ``if use_pallas and cache is None and key_mask is None``
+branches that used to live in ``models/layers.py``.
+
+Two backends ship:
+
+  * ``xla``    - pure jnp/lax reference path. Universal: every capability
+                 flag, every dtype; the terminal fallback.
+  * ``pallas`` - the LP-tiled Pallas kernels. Declares exactly what the
+                 kernels support: static scalar ``q_offset``, no key masks
+                 (the in-cache decode path therefore falls back to masked
+                 XLA *by declared capability*). Attention serves GQA by
+                 folding query groups into the sequence axis — K/V are never
+                 materialized repeated in HBM (the old wrapper's
+                 ``jnp.repeat`` cost g x the KV stream traffic).
+
+Adapters take ``(ctx, plan, *args, **kw)``: ``plan`` is the ExecutionPlan the
+dispatcher resolved from the entry's ``spec_fn`` (None for ops whose tiling is
+closed-form), so plan -> precision -> kernel is connected in one place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, FrozenSet, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv1d import conv1d_causal as _conv1d_pallas
+from repro.kernels.conv2d import _conv_spec, conv2d as _conv2d_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.matmul import _matmul_spec, matmul as _matmul_pallas
+from repro.kernels import ref
+
+from .context import ExecutionContext
+
+# Capability flags a call can require (derived per call in dispatch.*):
+#   dynamic_q_offset  - q_offset is a traced scalar (any in-cache path)
+#   per_row_q_offset  - q_offset is a (B,) vector (continuous-batching decode)
+#   key_mask          - a (B, Lk) validity mask over the keys (padded prefill)
+ATTN_FLAGS = ("dynamic_q_offset", "per_row_q_offset", "key_mask")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCapabilities:
+    """What one backend's op entry can serve.
+
+    ``dtypes`` is the accepted input dtypes ("*" = anything); ``flags`` the
+    supported optional call features."""
+
+    dtypes: Tuple[str, ...] = ("float32", "bfloat16")
+    flags: FrozenSet[str] = frozenset()
+
+    def missing(self, dtype: Optional[str] = None,
+                needs: Tuple[str, ...] = ()) -> Tuple[str, ...]:
+        """The subset of requirements this entry cannot serve (empty = capable)."""
+        out = []
+        if dtype is not None and "*" not in self.dtypes and dtype not in self.dtypes:
+            out.append(f"dtype:{dtype}")
+        out.extend(f for f in needs if f not in self.flags)
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpEntry:
+    """One backend's implementation of one op."""
+
+    fn: Callable  # (ctx, plan, *args, **kw) -> result
+    caps: OpCapabilities = OpCapabilities()
+    # builds the planner OpSpec from the call's arrays; None = closed-form
+    # tiling (conv1d lane widths, flash-attention blocks), no LP plan.
+    spec_fn: Optional[Callable] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A named op table with a fallback chain terminating at ``xla``."""
+
+    name: str
+    ops: Dict[str, OpEntry]
+    fallback: Optional[str] = None  # next backend when capabilities miss
+
+
+_BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    if not backend.ops:
+        raise ValueError(f"backend {backend.name!r} registers no ops")
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; "
+                       f"registered: {sorted(_BACKENDS)}")
+
+
+def backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def registered_ops() -> Tuple[str, ...]:
+    """Op names served by every registered backend (the dispatchable set)."""
+    names = None
+    for b in _BACKENDS.values():
+        names = set(b.ops) if names is None else names & set(b.ops)
+    return tuple(sorted(names or ()))
+
+
+# ---------------------------------------------------------------------------
+# XLA backend: jnp/lax implementations. Terminal fallback; supports
+# everything (grouped GQA kept factored, per-row offsets, key masks).
+# ---------------------------------------------------------------------------
+
+def _xla_matmul(ctx, plan, a, b, out_dtype=jnp.float32):
+    return ref.matmul_ref(a, b, out_dtype=out_dtype)
+
+
+def _xla_conv2d(ctx, plan, x, w, stride=(1, 1), out_dtype=jnp.float32):
+    return ref.conv2d_ref(x, w, stride=stride, out_dtype=out_dtype)
+
+
+def _xla_conv1d(ctx, plan, x, w):
+    return ref.conv1d_causal_ref(x, w)
+
+
+def xla_attention(q, k, v, causal: bool = True, q_offset=0,
+                  key_mask=None) -> jax.Array:
+    """jnp GQA attention with the grouping kept factored (no KV repeat in HBM).
+
+    ``q_offset`` is the absolute position of the first query: a scalar for
+    lockstep batches or a (B,) vector when every row decodes at its own depth.
+    ``key_mask`` is an optional (B, Lk) validity mask over the keys. Logits,
+    softmax, and PV accumulate in f32 (the paper's mixed-precision
+    discipline)."""
+    B, H, Lq, hd = q.shape
+    KV, Lk = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, KV, g, Lq, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bkgqd,bkld->bkgql", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = None
+    if causal:
+        off = jnp.asarray(q_offset, jnp.int32)
+        if off.ndim:
+            qpos = jnp.arange(Lq, dtype=jnp.int32)[None, :] + off[:, None]
+        else:
+            qpos = (jnp.arange(Lq, dtype=jnp.int32) + off)[None, :]
+        kpos = jnp.arange(Lk, dtype=jnp.int32)
+        mask = kpos[None, None, :] <= qpos[:, :, None]  # (B|1, Lq, Lk)
+    if key_mask is not None:
+        km = key_mask[:, None, :]  # (B, 1, Lk)
+        mask = km if mask is None else (mask & km)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgql,bkld->bkgqd", probs, v.astype(jnp.float32))
+    return o.reshape(B, H, Lq, hd).astype(q.dtype)
+
+
+def _xla_attention_entry(ctx, plan, q, k, v, causal=True, q_offset=0,
+                         key_mask=None):
+    return xla_attention(q, k, v, causal=causal, q_offset=q_offset,
+                        key_mask=key_mask)
+
+
+register_backend(Backend(
+    name="xla",
+    ops={
+        "matmul": OpEntry(_xla_matmul, OpCapabilities(dtypes=("*",))),
+        "conv2d": OpEntry(_xla_conv2d, OpCapabilities(dtypes=("*",))),
+        "conv1d_causal": OpEntry(_xla_conv1d, OpCapabilities(dtypes=("*",))),
+        "attention": OpEntry(
+            _xla_attention_entry,
+            OpCapabilities(dtypes=("*",), flags=frozenset(ATTN_FLAGS))),
+    },
+))
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend: LP-tiled kernels. Plans resolve through ctx.plan (the
+# process-wide cache); interpret mode comes from the target unless the
+# context overrides it.
+#
+# Differentiability: pallas_call has no JVP rule for scratch-carrying
+# kernels, and the missing rule fires inside lax.scan/checkpoint jaxpr
+# differentiation where no call-time feature detection could catch it. So
+# every pallas entry is wrapped in jax.custom_vjp: the forward runs the
+# LP-tiled kernel, the backward recomputes through the XLA reference
+# implementation (the standard flash-attention fwd-kernel/bwd-recompute
+# design) — training works on the pallas backend without a hand-written
+# backward kernel.
+# ---------------------------------------------------------------------------
+
+def _with_xla_vjp(pallas_fn: Callable, xla_fn: Callable, *arrays):
+    """Run ``pallas_fn(*arrays)`` forward with gradients defined by
+    ``jax.vjp`` through ``xla_fn`` (both close over their static config)."""
+    f = jax.custom_vjp(pallas_fn)
+
+    def fwd(*arrays):
+        return pallas_fn(*arrays), arrays
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(xla_fn, *res)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f(*arrays)
+
+def _matmul_plan_spec(a, b, **kw):
+    m, k = a.shape
+    n = b.shape[1]
+    return _matmul_spec(m, n, k, jnp.dtype(a.dtype).itemsize * 8)
+
+
+def _conv2d_plan_spec(x, w, stride=(1, 1), **kw):
+    N, c_I, H, W = x.shape
+    c_O, _, h_F, w_F = w.shape
+    sh, sw = stride
+    return _conv_spec(N, c_I, c_O, (H - h_F) // sh + 1, (W - w_F) // sw + 1,
+                      h_F, w_F, sh, sw, jnp.dtype(x.dtype).itemsize * 8)
+
+
+def _pallas_matmul(ctx, plan, a, b, out_dtype=jnp.float32):
+    return _with_xla_vjp(
+        lambda a_, b_: _matmul_pallas(a_, b_, out_dtype=out_dtype, plan=plan,
+                                      interpret=ctx.interpret),
+        lambda a_, b_: ref.matmul_ref(a_, b_, out_dtype=out_dtype), a, b)
+
+
+def _pallas_conv2d(ctx, plan, x, w, stride=(1, 1), out_dtype=jnp.float32):
+    return _with_xla_vjp(
+        lambda x_, w_: _conv2d_pallas(x_, w_, stride=stride,
+                                      out_dtype=out_dtype, plan=plan,
+                                      interpret=ctx.interpret),
+        lambda x_, w_: ref.conv2d_ref(x_, w_, stride=stride,
+                                      out_dtype=out_dtype), x, w)
+
+
+def _pallas_conv1d(ctx, plan, x, w):
+    return _with_xla_vjp(
+        lambda x_, w_: _conv1d_pallas(x_, w_, target=ctx.target,
+                                      interpret=ctx.interpret),
+        ref.conv1d_causal_ref, x, w)
+
+
+def _pallas_attention(ctx, plan, q, k, v, causal=True, q_offset=0,
+                      key_mask=None):
+    """GQA via group-folding: queries of the g heads sharing one KV head are
+    stacked along the sequence axis ((B*Hkv, g*Lq, Dh)), so K/V stream at
+    their (B*Hkv, Lk, Dh) size instead of being repeated g x in HBM. The
+    kernel recovers per-query absolute positions with ``q_seq_len``."""
+    assert key_mask is None, "capability-gated: pallas serves no key masks"
+
+    def fwd(q, k, v):
+        B, H, Lq, Dh = q.shape
+        Hkv, Lk = k.shape[1], k.shape[2]
+        g = H // Hkv
+        kf = k.reshape(B * Hkv, Lk, Dh)
+        vf = v.reshape(B * Hkv, Lk, Dh)
+        if g == 1:
+            out = _flash_pallas(q.reshape(B * H, Lq, Dh), kf, vf,
+                                causal=causal, q_offset=q_offset,
+                                target=ctx.target, interpret=ctx.interpret)
+            return out.reshape(B, H, Lq, Dh)
+        qf = q.reshape(B * Hkv, g * Lq, Dh)  # groups stacked on the seq axis
+        out = _flash_pallas(qf, kf, vf, causal=causal, q_offset=q_offset,
+                            q_seq_len=Lq, target=ctx.target,
+                            interpret=ctx.interpret)
+        return out.reshape(B, H, Lq, Dh)
+
+    return _with_xla_vjp(
+        fwd,
+        lambda q_, k_, v_: xla_attention(q_, k_, v_, causal=causal,
+                                         q_offset=q_offset), q, k, v)
+
+
+register_backend(Backend(
+    name="pallas",
+    fallback="xla",
+    ops={
+        "matmul": OpEntry(_pallas_matmul, spec_fn=_matmul_plan_spec),
+        "conv2d": OpEntry(_pallas_conv2d, spec_fn=_conv2d_plan_spec),
+        "conv1d_causal": OpEntry(_pallas_conv1d),
+        # flash kernel: static scalar q_offset only, no key masks -> the
+        # in-cache decode path falls back to xla by capability.
+        "attention": OpEntry(_pallas_attention, OpCapabilities()),
+    },
+))

@@ -19,7 +19,7 @@ Scheduling contract:
     at most max_len/bucket prefill variants instead of one per length.
   * decode: one pjit'd step for the whole pool with per-slot write offsets
     and positions; a slot only attends to its own prefix (per-row causal
-    masking in ``layers._xla_attention``). Free/finished slots ride along
+    masking in the dispatched XLA attention op). Free/finished slots ride along
     masked-out: their sampled tokens are discarded and their rows are fully
     overwritten at the next admission.
   * accounting: per-request EOS/stop tokens, ``max_new_tokens``, and the
@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.ops import ExecutionContext
 from repro.plan import CPU_INTERPRET, HardwareTarget
 
 PyTree = Any
@@ -104,10 +105,12 @@ def plan_batch_size(cfg: ModelConfig, max_len: int, target: HardwareTarget,
 
 
 @functools.lru_cache(maxsize=None)
-def _make_steps(cfg: ModelConfig, max_len: int, use_pallas: bool):
+def _make_steps(cfg: ModelConfig, max_len: int, ctx: ExecutionContext):
     """Compiled (prefill, insert, decode, sample) steps, shared across every
-    engine with the same (cfg, max_len, use_pallas) so warm jit caches carry
-    over between engines (and between the bench's wave/continuous runs)."""
+    engine with the same (cfg, max_len, ctx) so warm jit caches carry
+    over between engines (and between the bench's wave/continuous runs).
+    ``ctx`` arrives backend-resolved (``ExecutionContext.resolved``) so the
+    cache key cannot alias across environment changes."""
 
     def prefill(params, tokens, attn_mask, last):  # tokens (1, Lp)
         """Lp is the exact prompt length, or a bucket length with the pad
@@ -117,8 +120,7 @@ def _make_steps(cfg: ModelConfig, max_len: int, use_pallas: bool):
         cache = T.init_cache(cfg, 1, max_len)
         logits, cache, _ = T.forward(params, cfg, tokens=tokens, cache=cache,
                                      cache_index=jnp.zeros((), jnp.int32),
-                                     attn_mask=attn_mask,
-                                     use_pallas=use_pallas)
+                                     attn_mask=attn_mask, ctx=ctx)
         return jax.lax.dynamic_index_in_dim(logits, last, axis=1,
                                             keepdims=False), cache
 
@@ -127,8 +129,7 @@ def _make_steps(cfg: ModelConfig, max_len: int, use_pallas: bool):
 
     def decode(params, cache, token, index):  # token (B, 1), index (B,)
         logits, cache, _ = T.forward(params, cfg, tokens=token, cache=cache,
-                                     cache_index=index, decode=True,
-                                     use_pallas=use_pallas)
+                                     cache_index=index, decode=True, ctx=ctx)
         return logits[:, -1], cache
 
     def sample(logits, base_key, seeds, steps, temps):
@@ -155,19 +156,21 @@ class Engine:
     """Continuous-batching engine over a fixed slot pool.
 
     ``batch_size=None`` sizes the pool from the ``HardwareTarget``'s memory
-    model (``plan_batch_size``)."""
+    model (``plan_batch_size``); ``ctx=None`` builds the execution context
+    from ``target`` (backend per the ``repro.ops`` resolution order)."""
 
     def __init__(self, cfg: ModelConfig, params: PyTree, max_len: int = 512,
                  batch_size: Optional[int] = None,
-                 use_pallas: Optional[bool] = None,
+                 ctx: Optional[ExecutionContext] = None,
                  seed: int = 0, target: Optional[HardwareTarget] = None,
                  prefill_bucket: Optional[int] = None):
         assert cfg.causal, "serving requires a decoder model"
         self.cfg, self.params = cfg, params
         self.max_len = max_len
         self.target = target or CPU_INTERPRET
-        if use_pallas is None:
-            use_pallas = self.target.use_pallas
+        if ctx is None:
+            ctx = ExecutionContext(target=self.target)
+        self.ctx = ctx.resolved()
         if batch_size is None:
             batch_size = plan_batch_size(cfg, max_len, self.target)
         self.batch_size = batch_size
@@ -184,7 +187,7 @@ class Engine:
                 "recurrent blocks fold pad tokens into their state")
         self.prefill_bucket = max(1, prefill_bucket)
         (self._prefill, self._insert, self._decode, self._sample) = \
-            _make_steps(cfg, max_len, bool(use_pallas))
+            _make_steps(cfg, max_len, self.ctx)
         self.base_key = jax.random.PRNGKey(seed)
 
     # -- scheduling policy ----------------------------------------------------

@@ -33,6 +33,7 @@ from repro.models import sharding as shd
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.scan_util import scan as _scan
+from repro.ops import ExecutionContext
 from . import checkpoint as ckpt
 from .optimizer import AdamWConfig, AdamWState, apply_updates, init_state
 
@@ -50,7 +51,7 @@ class TrainConfig:
     log_every: int = 10
     remat: bool = False
     n_groups: int = 1
-    use_pallas: bool = False
+    ctx: Optional[ExecutionContext] = None  # execution policy (repro.ops)
     compress_grads: bool = False
     aux_weight: float = 0.01
     seed: int = 0
@@ -78,7 +79,7 @@ def make_train_step(
     def loss_for(params, batch):
         return T.loss_fn(params, model_cfg, batch,
                          n_groups=train_cfg.n_groups,
-                         use_pallas=train_cfg.use_pallas,
+                         ctx=train_cfg.ctx,
                          remat=train_cfg.remat,
                          aux_weight=train_cfg.aux_weight,
                          loss_chunks=train_cfg.loss_chunks,

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.conv_model import Precision
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.conv1d import conv1d_causal
 from repro.kernels.conv2d import conv2d
 from repro.kernels.flash_attention import flash_attention
@@ -122,21 +122,24 @@ def test_flash_attention_sweep(B, H, Hkv, Lq, Lk, Dh, causal, off):
                                rtol=2e-3, atol=2e-3)
 
 
-# ---------------------------------------------------------------------------
-# ops dispatch: xla path == pallas path
-# ---------------------------------------------------------------------------
-
-def test_ops_paths_agree():
-    a = jax.random.normal(KEY, (64, 96), jnp.float32)
-    b = jax.random.normal(K2, (96, 128), jnp.float32)
+def test_flash_attention_gqa_group_folding():
+    """q_seq_len folds GQA query groups onto the sequence axis: positions
+    restart per group, so the grouped call matches per-head flash calls
+    without ever repeating K/V (backend-agreement lives in test_ops)."""
+    B, Hkv, g, Lq, Dh = 1, 2, 3, 40, 16
+    q = jax.random.normal(KEY, (B, Hkv, g, Lq, Dh), jnp.float32) * 0.3
+    k = jax.random.normal(K2, (B, Hkv, Lq, Dh), jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, Lq, Dh), jnp.float32)
+    got = flash_attention(q.reshape(B * Hkv, g * Lq, Dh),
+                          k.reshape(B * Hkv, Lq, Dh),
+                          v.reshape(B * Hkv, Lq, Dh),
+                          causal=True, q_seq_len=Lq, block_q=32, block_k=32)
+    want = jnp.stack([
+        flash_attention(q[:, :, j].reshape(B * Hkv, Lq, Dh),
+                        k.reshape(B * Hkv, Lq, Dh),
+                        v.reshape(B * Hkv, Lq, Dh),
+                        causal=True, block_q=32, block_k=32)
+        for j in range(g)], axis=1)  # (B*Hkv, g, Lq, Dh)
     np.testing.assert_allclose(
-        np.asarray(ops.matmul(a, b, use_pallas=False)),
-        np.asarray(ops.matmul(a, b, use_pallas=True)), rtol=1e-5, atol=1e-5)
-
-    q = jax.random.normal(KEY, (1, 4, 32, 16), jnp.float32) * 0.3
-    k = jax.random.normal(K2, (1, 2, 32, 16), jnp.float32) * 0.3
-    v = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 32, 16), jnp.float32)
-    np.testing.assert_allclose(
-        np.asarray(ops.attention(q, k, v, use_pallas=False)),
-        np.asarray(ops.attention(q, k, v, use_pallas=True)),
+        np.asarray(got).reshape(B * Hkv, g, Lq, Dh), np.asarray(want),
         rtol=2e-3, atol=2e-3)

@@ -1,0 +1,242 @@
+"""The repro.ops dispatch subsystem: backend agreement for every registered
+op, capability fallback (observable via explain/record_dispatch), environment
+resolution, precision policy, and the deprecation shim."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ops
+from repro.kernels import ref
+from repro.plan import CPU_INTERPRET, GEMMINI, MatmulSpec, TPU_V5E, plan
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+K2 = jax.random.PRNGKey(1)
+K3 = jax.random.PRNGKey(2)
+
+XLA = ops.ExecutionContext(target=TPU_V5E, backend="xla")
+PALLAS = ops.ExecutionContext(target=TPU_V5E, backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# One parametrized sweep: the xla and pallas backends agree for EVERY
+# registered op (replaces the per-kernel agreement tests).
+# ---------------------------------------------------------------------------
+
+def _op_case(op: str):
+    """Canonical inputs + call kwargs for one registered op."""
+    if op == "matmul":
+        return (jax.random.normal(KEY, (64, 96)),
+                jax.random.normal(K2, (96, 128))), {}
+    if op == "conv2d":
+        return (jax.random.normal(KEY, (2, 8, 12, 12)),
+                jax.random.normal(K2, (16, 8, 3, 3))), {"stride": (1, 1)}
+    if op == "conv1d_causal":
+        return (jax.random.normal(KEY, (2, 33, 130)),
+                jax.random.normal(K2, (4, 130))), {}
+    if op == "attention":  # GQA shape: exercises the repeat-free group fold
+        return (jax.random.normal(KEY, (2, 8, 33, 16)) * 0.3,
+                jax.random.normal(K2, (2, 2, 33, 16)) * 0.3,
+                jax.random.normal(K3, (2, 2, 33, 16))), {"causal": True}
+    raise NotImplementedError(
+        f"op {op!r} is registered but has no agreement-sweep case; add one")
+
+
+@pytest.mark.parametrize("op", ops.registered_ops())
+def test_backends_agree(op):
+    args, kw = _op_case(op)
+    fn = getattr(ops, op)
+    got_x = np.asarray(fn(*args, ctx=XLA, **kw))
+    got_p = np.asarray(fn(*args, ctx=PALLAS, **kw))
+    np.testing.assert_allclose(got_x, got_p, rtol=2e-3, atol=2e-3,
+                               err_msg=f"xla and pallas disagree on {op}")
+
+
+def test_every_registered_op_is_swept():
+    assert set(ops.registered_ops()) == {
+        "matmul", "conv2d", "conv1d_causal", "attention"}
+    for op in ops.registered_ops():
+        _op_case(op)  # raises if an op was registered without a sweep case
+
+
+# ---------------------------------------------------------------------------
+# GQA group folding (the jnp.repeat replacement)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("H,Hkv,Lq,Lk,causal", [
+    (8, 2, 33, 33, True), (4, 1, 17, 17, True), (8, 8, 16, 16, True),
+    (6, 3, 20, 20, False),
+])
+def test_pallas_gqa_grouping_matches_oracle(H, Hkv, Lq, Lk, causal):
+    q = jax.random.normal(KEY, (2, H, Lq, 16)) * 0.3
+    k = jax.random.normal(K2, (2, Hkv, Lk, 16)) * 0.3
+    v = jax.random.normal(K3, (2, Hkv, Lk, 16))
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    got = ops.attention(q, k, v, causal=causal, ctx=PALLAS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Capability fallback: pallas attention on cache/masked paths -> masked XLA
+# ---------------------------------------------------------------------------
+
+def test_explain_fallback_on_decode_features():
+    # static prefill call: pallas serves it
+    assert ops.explain("attention", PALLAS).chosen == "pallas"
+    # in-cache decode: q_offset is traced -> falls back by capability
+    needs = ops.attention_needs(q_offset=jnp.asarray(5, jnp.int32))
+    dec = ops.explain("attention", PALLAS, needs=needs)
+    assert dec.requested == "pallas" and dec.chosen == "xla"
+    assert "dynamic_q_offset" in dec.missing and dec.fell_back
+    # continuous-batching decode: per-row offsets
+    needs = ops.attention_needs(q_offset=jnp.arange(4))
+    assert ops.explain("attention", PALLAS, needs=needs).chosen == "xla"
+    # padded prefill: key mask
+    dec = ops.explain("attention", PALLAS, needs=("key_mask",))
+    assert dec.chosen == "xla" and "key_mask" in dec.missing
+    assert "xla" in dec.why()
+
+
+def _tiny_cfg():
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                       n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                       param_dtype="float32", compute_dtype="float32")
+
+
+def test_in_cache_decode_dispatches_to_xla_by_capability():
+    """The acceptance check: requesting pallas attention on the in-cache
+    decode path dispatches to masked XLA, observed via the trace API."""
+    cfg = _tiny_cfg()
+    p = layers.init_attention(KEY, cfg)
+    x = jax.random.normal(K2, (2, 1, cfg.d_model))
+    kv = (jnp.zeros((2, 2, 16, cfg.hd)), jnp.zeros((2, 2, 16, cfg.hd)))
+    with ops.record_dispatch() as log:
+        layers.attention_block(p, x, cfg, positions=jnp.asarray([3]),
+                               cache=kv, cache_index=jnp.asarray(3),
+                               ctx=PALLAS)
+    att = [d for d in log if d.op == "attention"]
+    assert att and att[-1].requested == "pallas" and att[-1].chosen == "xla"
+    assert "dynamic_q_offset" in att[-1].missing
+    # ...while the no-cache prefill path stays on pallas
+    with ops.record_dispatch() as log:
+        layers.attention_block(p, x, cfg, positions=jnp.asarray([0]),
+                               ctx=PALLAS)
+    att = [d for d in log if d.op == "attention"]
+    assert att and att[-1].chosen == "pallas" and not att[-1].fell_back
+
+
+def test_pallas_backend_is_differentiable():
+    """pallas_call has no JVP rule, so the pallas entries wrap the kernel in
+    custom_vjp with an XLA-recompute backward: gradients match the pure-XLA
+    path even through lax.scan (where call-time fallback could never work
+    because scan differentiates its traced jaxpr, not the python)."""
+    a = jax.random.normal(KEY, (16, 24))
+    b = jax.random.normal(K2, (24, 8))
+
+    def loss(ctx):
+        def f(a_):
+            out = ops.matmul(a_, b, ctx=ctx)
+            s, _ = jax.lax.scan(lambda c, _: (c + ops.matmul(
+                a_, b, ctx=ctx).sum(), None), 0.0, None, length=2)
+            return out.sum() + s
+        return jax.grad(f)(a)
+
+    g_p = loss(PALLAS)
+    g_x = loss(XLA)
+    np.testing.assert_allclose(np.asarray(g_p), np.asarray(g_x),
+                               rtol=1e-4, atol=1e-4)
+
+    q = jax.random.normal(KEY, (1, 4, 16, 8)) * 0.3
+    k = jax.random.normal(K2, (1, 2, 16, 8)) * 0.3
+    v = jax.random.normal(K3, (1, 2, 16, 8))
+    ga = jax.grad(lambda q_: ops.attention(q_, k, v, ctx=PALLAS).sum())(q)
+    gx = jax.grad(lambda q_: ops.attention(q_, k, v, ctx=XLA).sum())(q)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gx),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_dispatch_resolves_execution_plan():
+    a = jax.random.normal(KEY, (128, 64))
+    b = jax.random.normal(K2, (64, 256))
+    dec = ops.explain("matmul", PALLAS, spec_args=(a, b))
+    assert dec.plan is not None
+    want = plan(MatmulSpec(128, 256, 64,
+                           prec=dec.plan.op.prec), TPU_V5E)
+    assert dec.plan is want  # same memoized object: one process-wide cache
+    # xla delegates tiling to the compiler: no LP plan resolved
+    assert ops.explain("matmul", XLA, spec_args=(a, b)).plan is None
+
+
+# ---------------------------------------------------------------------------
+# ExecutionContext: resolution order, env vars, precision policy
+# ---------------------------------------------------------------------------
+
+def test_backend_resolution_order(monkeypatch):
+    monkeypatch.delenv(ops.BACKEND_ENV, raising=False)
+    monkeypatch.delenv(ops.LEGACY_BACKEND_ENV, raising=False)
+    # target default
+    assert ops.ExecutionContext(target=TPU_V5E).resolved_backend() == "pallas"
+    assert ops.ExecutionContext(target=CPU_INTERPRET).resolved_backend() == "xla"
+    # env overrides target
+    monkeypatch.setenv(ops.BACKEND_ENV, "xla")
+    assert ops.ExecutionContext(target=TPU_V5E).resolved_backend() == "xla"
+    # explicit override beats env
+    assert ops.ExecutionContext(target=TPU_V5E,
+                                backend="pallas").resolved_backend() == "pallas"
+    assert ops.default_context().resolved_backend() == "xla"
+    monkeypatch.setenv(ops.BACKEND_ENV, "nope")
+    with pytest.raises(ValueError):
+        ops.ExecutionContext().resolved_backend()
+
+
+def test_legacy_env_var_honored_with_deprecation(monkeypatch):
+    monkeypatch.delenv(ops.BACKEND_ENV, raising=False)
+    monkeypatch.setenv(ops.LEGACY_BACKEND_ENV, "1")
+    with pytest.warns(DeprecationWarning, match="REPRO_USE_PALLAS"):
+        assert ops.env_backend() == "pallas"
+    monkeypatch.setenv(ops.BACKEND_ENV, "xla")  # new var wins, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert ops.env_backend() == "xla"
+
+
+def test_resolved_pins_backend(monkeypatch):
+    monkeypatch.setenv(ops.BACKEND_ENV, "pallas")
+    pinned = ops.ExecutionContext(target=CPU_INTERPRET).resolved()
+    monkeypatch.delenv(ops.BACKEND_ENV)
+    assert pinned.backend == "pallas"  # env read once, cache-key safe
+
+
+def test_precision_policy_dtypes():
+    assert ops.ExecutionContext(target=TPU_V5E).stream_dtype == jnp.bfloat16
+    assert ops.ExecutionContext(target=TPU_V5E).acc_dtype == jnp.float32
+    assert ops.ExecutionContext(target=GEMMINI).stream_dtype == jnp.int8
+    assert ops.ExecutionContext(target=CPU_INTERPRET).stream_dtype == jnp.float32
+    # out dtype of a dispatched op defaults to the policy's accumulator
+    a = jax.random.normal(KEY, (8, 8), jnp.bfloat16)
+    assert ops.matmul(a, a, ctx=XLA).dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim (kernels/ops.py): one PR of backwards compatibility
+# ---------------------------------------------------------------------------
+
+def test_use_pallas_shim_forwards_and_warns():
+    from repro.kernels import ops as legacy
+
+    a = jax.random.normal(KEY, (16, 24))
+    b = jax.random.normal(K2, (24, 32))
+    with pytest.warns(DeprecationWarning, match="use_pallas"):
+        got = legacy.matmul(a, b, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ops.matmul(a, b, ctx=PALLAS)),
+                               rtol=1e-5, atol=1e-5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        legacy.matmul(a, b)  # use_pallas=None: no warning, new resolution
