@@ -47,7 +47,8 @@ def main():
 
     ep = plan(ConvSpec.from_shape(shape), target)
     print(f"ExecutionPlan for {target.name}: tile={ep.conv_tile()}")
-    print(f"  kernel tiles (bN, b_cI, b_cO) = {ep.tiles}, grid = {ep.grid}")
+    print(f"  kernel tiles (bN, b_cI, b_cO, b_hO, b_wO) = {ep.tiles}, "
+          f"grid = {ep.grid}")
     print(f"  modeled comm {ep.comm_volume:.4e} words "
           f"({ep.efficiency:.2f}x bound)\n")
 

@@ -359,6 +359,63 @@ def optimize_blocking(
     return blk
 
 
+# ---------------------------------------------------------------------------
+# Kernel-level footprints: what the lowered conv2d kernel actually holds in
+# VMEM for a (bN, b_cI, b_cO, b_hO, b_wO) tile. Differs from the lifted
+# Blocking model in two ways: the kernel always unrolls the full (h_F, w_F)
+# filter (no q/r blocking), and its input window is the exact halo extent
+# (b_hO - 1) * sh + h_F rather than the lifted (b_hO + b_q7 - 1) * b_r7.
+# ---------------------------------------------------------------------------
+
+def conv_kernel_footprints(shape: ConvShape,
+                           tiles: Sequence[int]) -> Dict[str, float]:
+    """Words each array block of the spatially-tiled conv2d kernel occupies
+    in fast memory, for kernel tiles ``(bN, b_cI, b_cO, b_hO, b_wO)``."""
+    bN, b_cI, b_cO, b_hO, b_wO = tiles
+    p = shape.prec
+    h_in = (b_hO - 1) * shape.sh + shape.h_F
+    w_in = (b_wO - 1) * shape.sw + shape.w_F
+    return {
+        "input": p.p_I * bN * b_cI * h_in * w_in,
+        "filter": p.p_F * b_cO * b_cI * shape.h_F * shape.w_F,
+        "output": p.p_O * bN * b_cO * b_hO * b_wO,
+    }
+
+
+def conv_kernel_tiles_fit(shape: ConvShape, tiles: Sequence[int],
+                          mem: MemoryModel) -> bool:
+    """Whether the kernel tile's halo-window footprint obeys the same
+    double-buffered capacity discipline the blocking LP planned under."""
+    fp = conv_kernel_footprints(shape, tiles)
+    if mem.mode == "split":
+        return (fp["input"] + fp["filter"] <= mem.M_eff
+                and fp["output"] <= mem.M_acc_eff)
+    return sum(fp.values()) <= mem.M_eff
+
+
+def fit_conv_kernel_tiles(shape: ConvShape, tiles: Sequence[int],
+                          mem: MemoryModel) -> Tuple[int, int, int, int, int]:
+    """Shrink kernel tiles (best-gain axis first) until the halo-window
+    footprint fits; the LP solution is usually already feasible, but its
+    lifted model can undercount when it blocked the filter taps."""
+    b = list(tiles)
+    while not conv_kernel_tiles_fit(shape, b, mem):
+        cur = sum(conv_kernel_footprints(shape, b).values())
+        best_i, best_gain = None, 0.0
+        for i in range(5):
+            if b[i] == 1:
+                continue
+            trial = list(b)
+            trial[i] = max(1, b[i] // 2)
+            gain = cur - sum(conv_kernel_footprints(shape, trial).values())
+            if gain > best_gain:
+                best_i, best_gain = i, gain
+        if best_i is None:
+            break
+        b[best_i] = max(1, b[best_i] // 2)
+    return tuple(b)
+
+
 def blocking_efficiency(shape: ConvShape, mem: MemoryModel) -> Tuple[float, float, float]:
     """(modeled comm volume, lower bound, ratio) for the optimized blocking."""
     from .bounds import single_processor_bound

@@ -2,27 +2,36 @@
 
 This is the paper's §5 tiling, retargeted from GEMMINI to the TPU memory
 hierarchy: the blocking LP (core.tiling.optimize_blocking, eq. 6 + the §5
-buffer model) picks the channel/batch tile sizes; the f32 output tile plays
-the accumulator (held in VMEM across the c_I reduction, which is the innermost
-grid axis); input/filter tiles stream HBM->VMEM in low precision.
+buffer model) picks the channel/batch/spatial tile sizes; the f32 output tile
+plays the accumulator (held in VMEM across the c_I reduction, which is the
+innermost grid axis); input/filter tiles stream HBM->VMEM in low precision.
 
 Layout: NCHW input, OIHW filter, VALID padding, arbitrary stride — the exact
 7NL CNN of §2.1. Inside a tile the (h_F, w_F) loops are fully unrolled and
-each tap is one MXU GEMM of shape (bN*h_O*w_O, b_cI) x (b_cI, b_cO): the
+each tap is one MXU GEMM of shape (bN*b_hO*b_wO, b_cI) x (b_cI, b_cO): the
 small-filter lift's q/r axes land in the unroll, channel axes land in the MXU.
 
-Spatial (h_O) tiling is expressible too because the stride-s window of an
-output row block [i*bh, (i+1)*bh) starts at input row i*bh*s: when bh*s is the
-input block step, overlapping halos of h_F - s rows are covered by loading
-(bh*s + h_F - s) rounded up to the next multiple of bh*s rows — we keep v1
-simple (full spatial extent per tile; the LP rarely tiles spatial for LM-sized
-convs) and expose spatial tiling through ``grid_h`` when the footprint needs it.
+Spatial tiling is halo-aware: an output row block [i*bh, (i+1)*bh) needs the
+overlapping input window starting at row i*bh*sh of (bh - 1)*sh + h_F rows
+(consecutive windows share an h_F - sh row halo), and similarly for columns.
+Overlapping windows cannot be expressed with blocked BlockSpecs, so the input
+and filter stay in ANY/HBM memory and the kernel streams each window itself
+with ``pltpu.make_async_copy`` into a two-slot VMEM scratch, double-buffered
+across the c_I reduction grid axis: while the MXU runs the taps of reduction
+step ci, the DMAs for step ci + 1 are already in flight (§5's
+double-buffering, which is also why the LP halves usable capacity).
+
+``conv2d_hbm_words`` reports the measured HBM words one dispatch moves,
+computed from the same launch geometry the kernel lowers (grid x DMA window
+sizes + output stores) — the number ``ops.explain`` places next to the
+paper's Thm 2.1 lower bound.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import math
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,33 +50,87 @@ def _conv_spec(N: int, c_I: int, c_O: int, h_O: int, w_O: int, h_F: int,
                     sw=sw, sh=sh, prec=Precision(p_in, p_in, 1.0))
 
 
-def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_ci: int, h_F: int,
-                 w_F: int, sh: int, sw: int, h_O: int, w_O: int):
-    ci = pl.program_id(2)
+def _normalize_tiles(tiles: Sequence[int], h_O: int, w_O: int
+                     ) -> Tuple[int, int, int, int, int]:
+    """Accept the legacy (bN, b_cI, b_cO) triple (spatial kept whole) or the
+    full (bN, b_cI, b_cO, b_hO, b_wO) planner tuple."""
+    if len(tiles) == 3:
+        return (*tiles, h_O, w_O)
+    bN, b_cI, b_cO, bh, bw = tiles
+    return (bN, b_cI, b_cO, max(1, min(bh, h_O)), max(1, min(bw, w_O)))
+
+
+def _launch_geometry(N: int, c_I: int, c_O: int, H: int, W: int, h_F: int,
+                     w_F: int, sh: int, sw: int,
+                     tiles: Tuple[int, int, int, int, int]):
+    """Padded dims, halo-window extents, and grid — the single source of
+    truth shared by the kernel lowering and the HBM-word counter."""
+    bN, b_cI, b_cO, bh, bw = tiles
+    h_O = (H - h_F) // sh + 1
+    w_O = (W - w_F) // sw + 1
+    Np, cIp, cOp = round_up(N, bN), round_up(c_I, b_cI), round_up(c_O, b_cO)
+    hOp, wOp = round_up(h_O, bh), round_up(w_O, bw)
+    # padded input must cover the last block's halo window
+    Hp = max(H, (hOp - 1) * sh + h_F)
+    Wp = max(W, (wOp - 1) * sw + w_F)
+    h_in = (bh - 1) * sh + h_F
+    w_in = (bw - 1) * sw + w_F
+    grid = (Np // bN, cOp // b_cO, hOp // bh, wOp // bw, cIp // b_cI)
+    return Np, cIp, cOp, hOp, wOp, Hp, Wp, h_in, w_in, grid
+
+
+def _conv_kernel(x_hbm, w_hbm, o_ref, x_vmem, w_vmem, acc_ref, sems, *,
+                 n_ci: int, tiles: Tuple[int, int, int, int, int],
+                 h_in: int, w_in: int, h_F: int, w_F: int, sh: int, sw: int):
+    bN, b_cI, b_cO, bh, bw = tiles
+    n, co, h, wb, ci = (pl.program_id(i) for i in range(5))
+
+    def stream(slot, ci_idx):
+        """The two HBM->VMEM copies feeding reduction step ci_idx: the halo
+        input window of this (n, h, wb) tile and the (co, ci) filter block."""
+        return (
+            pltpu.make_async_copy(
+                x_hbm.at[pl.ds(n * bN, bN), pl.ds(ci_idx * b_cI, b_cI),
+                         pl.ds(h * bh * sh, h_in), pl.ds(wb * bw * sw, w_in)],
+                x_vmem.at[slot], sems.at[slot, 0]),
+            pltpu.make_async_copy(
+                w_hbm.at[pl.ds(co * b_cO, b_cO), pl.ds(ci_idx * b_cI, b_cI)],
+                w_vmem.at[slot], sems.at[slot, 1]),
+        )
 
     @pl.when(ci == 0)
-    def _init():
+    def _warmup():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        for cp in stream(0, 0):
+            cp.start()
 
-    x = x_ref[...]  # (bN, b_cI, H, W)
-    w = w_ref[...]  # (b_cO, b_cI, h_F, w_F)
-    bN, b_cI = x.shape[0], x.shape[1]
-    b_cO = w.shape[0]
+    slot = ci % 2
+
+    @pl.when(ci + 1 < n_ci)
+    def _prefetch():  # overlap the next reduction step's DMA with the GEMMs
+        for cp in stream(1 - slot, ci + 1):
+            cp.start()
+
+    for cp in stream(slot, ci):
+        cp.wait()
+
+    x = x_vmem[slot]  # (bN, b_cI, h_in, w_in)
+    w = w_vmem[slot]  # (b_cO, b_cI, h_F, w_F)
     acc = acc_ref[...]
     for hf in range(h_F):
         for wf in range(w_F):
-            # strided tap window: (bN, b_cI, h_O, w_O)
+            # strided tap window: (bN, b_cI, bh, bw)
             tap = jax.lax.slice(
                 x,
                 (0, 0, hf, wf),
-                (bN, b_cI, hf + (h_O - 1) * sh + 1, wf + (w_O - 1) * sw + 1),
+                (bN, b_cI, hf + (bh - 1) * sh + 1, wf + (bw - 1) * sw + 1),
                 (1, 1, sh, sw),
             )
-            # MXU GEMM: (bN*h_O*w_O, b_cI) @ (b_cI, b_cO)
-            lhs = tap.transpose(0, 2, 3, 1).reshape(bN * h_O * w_O, b_cI)
+            # MXU GEMM: (bN*bh*bw, b_cI) @ (b_cI, b_cO)
+            lhs = tap.transpose(0, 2, 3, 1).reshape(bN * bh * bw, b_cI)
             rhs = w[:, :, hf, wf].T  # (b_cI, b_cO)
             out = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
-            acc = acc + out.reshape(bN, h_O, w_O, b_cO).transpose(0, 3, 1, 2)
+            acc = acc + out.reshape(bN, bh, bw, b_cO).transpose(0, 3, 1, 2)
     acc_ref[...] = acc
 
     @pl.when(ci == n_ci - 1)
@@ -80,17 +143,18 @@ def conv2d(
     w: jax.Array,  # (c_O, c_I, h_F, w_F)
     stride: Tuple[int, int] = (1, 1),
     out_dtype=jnp.float32,
-    tiles: Optional[Tuple[int, int, int]] = None,
+    tiles: Optional[Sequence[int]] = None,
     plan: Optional[ExecutionPlan] = None,
     target: Optional[HardwareTarget] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Direct convolution with paper-LP tiling. VALID padding.
 
-    Tiles come from (in priority order) an explicit legacy ``tiles`` triple,
-    an ``ExecutionPlan`` (``repro.plan.plan``), or a fresh plan solved for
-    ``target`` (default TPU_V5E). ``interpret`` defaults to the target's
-    policy (True everywhere until a real TPU backend is attached)."""
+    Tiles come from (in priority order) an explicit legacy ``tiles`` tuple —
+    (bN, b_cI, b_cO) or (bN, b_cI, b_cO, b_hO, b_wO) — an ``ExecutionPlan``
+    (``repro.plan.plan``), or a fresh plan solved for ``target`` (default
+    TPU_V5E). ``interpret`` defaults to the target's policy (True everywhere
+    until a real TPU backend is attached)."""
     N, c_I, H, W = x.shape
     c_O, c_I2, h_F, w_F = w.shape
     assert c_I == c_I2
@@ -98,28 +162,72 @@ def conv2d(
     h_O = (H - h_F) // sh + 1
     w_O = (W - w_F) // sw + 1
     in_bits = jnp.dtype(x.dtype).itemsize * 8
-    (bN, b_cI, b_cO), interpret = resolve_kernel_plan(
+    t, interpret = resolve_kernel_plan(
         _conv_spec(N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, in_bits),
         plan=plan, target=target, tiles=tiles, interpret=interpret)
+    t = _normalize_tiles(t, h_O, w_O)
+    bN, b_cI, b_cO, bh, bw = t
+    (Np, cIp, cOp, hOp, wOp, Hp, Wp, h_in, w_in,
+     grid) = _launch_geometry(N, c_I, c_O, H, W, h_F, w_F, sh, sw, t)
 
-    Np, cIp, cOp = round_up(N, bN), round_up(c_I, b_cI), round_up(c_O, b_cO)
-    if (Np, cIp) != (N, c_I):
-        x = jnp.pad(x, ((0, Np - N), (0, cIp - c_I), (0, 0), (0, 0)))
+    if (Np, cIp, Hp, Wp) != (N, c_I, H, W):
+        x = jnp.pad(x, ((0, Np - N), (0, cIp - c_I), (0, Hp - H),
+                        (0, Wp - W)))
     if (cOp, cIp) != (c_O, c_I):
         w = jnp.pad(w, ((0, cOp - c_O), (0, cIp - c_I), (0, 0), (0, 0)))
 
-    n_n, n_co, n_ci = Np // bN, cOp // b_cO, cIp // b_cI
     out = pl.pallas_call(
-        functools.partial(_conv_kernel, n_ci=n_ci, h_F=h_F, w_F=w_F, sh=sh,
-                          sw=sw, h_O=h_O, w_O=w_O),
-        grid=(n_n, n_co, n_ci),
-        in_specs=[
-            pl.BlockSpec((bN, b_cI, H, W), lambda n, co, ci: (n, ci, 0, 0)),
-            pl.BlockSpec((b_cO, b_cI, h_F, w_F), lambda n, co, ci: (co, ci, 0, 0)),
+        functools.partial(_conv_kernel, n_ci=grid[4], tiles=t, h_in=h_in,
+                          w_in=w_in, h_F=h_F, w_F=w_F, sh=sh, sw=sw),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((bN, b_cO, bh, bw),
+                               lambda n, co, h, wb, ci: (n, co, h, wb)),
+        out_shape=jax.ShapeDtypeStruct((Np, cOp, hOp, wOp), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, bN, b_cI, h_in, w_in), x.dtype),  # double-buffered
+            pltpu.VMEM((2, b_cO, b_cI, h_F, w_F), w.dtype),  # input + filter
+            pltpu.VMEM((bN, b_cO, bh, bw), jnp.float32),  # f32 accumulator
+            pltpu.SemaphoreType.DMA((2, 2)),
         ],
-        out_specs=pl.BlockSpec((bN, b_cO, h_O, w_O), lambda n, co, ci: (n, co, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((Np, cOp, h_O, w_O), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bN, b_cO, h_O, w_O), jnp.float32)],
         interpret=interpret,
     )(x, w)
-    return out[:N, :c_O]
+    return out[:N, :c_O, :h_O, :w_O]
+
+
+def conv2d_hbm_words(
+    x,  # array or ShapeDtypeStruct, (N, c_I, H, W)
+    w,  # array or ShapeDtypeStruct, (c_O, c_I, h_F, w_F)
+    stride: Tuple[int, int] = (1, 1),
+    tiles: Optional[Sequence[int]] = None,
+    plan: Optional[ExecutionPlan] = None,
+    target: Optional[HardwareTarget] = None,
+    out_dtype=jnp.float32,
+) -> float:
+    """Measured HBM words (32-bit) one ``conv2d`` dispatch moves.
+
+    Counts exactly what the kernel lowers for these arguments: one input
+    halo window + one filter block DMA'd per grid step, one output block
+    stored per (n, co, h, w) tile — padding included. Only shapes/dtypes are
+    consulted, so ``jax.ShapeDtypeStruct`` arguments work (no execution)."""
+    N, c_I, H, W = x.shape
+    c_O, _, h_F, w_F = w.shape
+    sh, sw = stride
+    h_O = (H - h_F) // sh + 1
+    w_O = (W - w_F) // sw + 1
+    in_bits = jnp.dtype(x.dtype).itemsize * 8
+    t, _ = resolve_kernel_plan(
+        _conv_spec(N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, in_bits),
+        plan=plan, target=target, tiles=tiles)
+    t = _normalize_tiles(t, h_O, w_O)
+    bN, b_cI, b_cO, bh, bw = t
+    (Np, cIp, cOp, hOp, wOp, _, _, h_in, w_in,
+     grid) = _launch_geometry(N, c_I, c_O, H, W, h_F, w_F, sh, sw, t)
+    n_steps = math.prod(grid)
+    p_in = jnp.dtype(x.dtype).itemsize / 4.0
+    p_flt = jnp.dtype(w.dtype).itemsize / 4.0
+    p_out = jnp.dtype(out_dtype).itemsize / 4.0
+    return (n_steps * bN * b_cI * h_in * w_in * p_in
+            + n_steps * b_cO * b_cI * h_F * w_F * p_flt
+            + Np * cOp * hOp * wOp * p_out)

@@ -33,11 +33,10 @@ def main():
     ap.add_argument("--data", default=None, help="token file (uint32)")
     ap.add_argument("--mesh", default=None,
                     help="e.g. '2,4' -> (data=2, model=4) over local devices")
-    ap.add_argument("--backend", choices=("xla", "pallas"), default=None,
+    ap.add_argument("--backend", choices=("xla", "pallas", "im2col"),
+                    default=None,
                     help="kernel backend override; default resolves from "
                          "REPRO_BACKEND and then the --target preset")
-    ap.add_argument("--use-pallas", action="store_true",
-                    help="DEPRECATED: same as --backend pallas")
     ap.add_argument("--target", default=None,
                     help="hardware target preset (tpu_v5e | gemmini | "
                          "cpu_interpret); sets the plan/precision policy "
@@ -56,12 +55,6 @@ def main():
     from repro.train.trainer import TrainConfig, Trainer
 
     backend = args.backend
-    if args.use_pallas:
-        import warnings
-
-        warnings.warn("--use-pallas is deprecated; use --backend pallas",
-                      DeprecationWarning)
-        backend = backend or "pallas"
     if args.target:
         from repro.plan import get_target
 

@@ -17,17 +17,21 @@ therefore the optimal execution strategy.
                                                        # XLA *by capability*
     ops.explain("attention", ctx, needs=("key_mask",)).chosen  # -> "xla"
 
-Backends are registered in ``repro.ops.registry`` (``xla``, ``pallas``); each
-op entry declares capabilities (accepted dtypes, per-row ``q_offset``, key
-masks) and the dispatcher walks the fallback chain until one covers the call.
-``ExecutionContext`` carries the HardwareTarget (precision policy + plan
-cache handle), an optional backend override, and the Pallas interpret flag —
-it supersedes the ``use_pallas`` booleans that used to thread through the
-model stack. Backend selection from the environment: ``REPRO_BACKEND=xla|
-pallas`` (``REPRO_USE_PALLAS=1`` still honored, deprecated).
+Backends are registered in ``repro.ops.registry`` (``xla``, ``pallas``, and
+the ``im2col`` conv baseline); each op entry declares capabilities (accepted
+dtypes, per-row ``q_offset``, key masks) and the dispatcher walks the
+fallback chain until one covers the call. ``ExecutionContext`` carries the
+HardwareTarget (precision policy + plan cache handle), an optional backend
+override, and the Pallas interpret flag — it supersedes the ``use_pallas``
+booleans that used to thread through the model stack (the last shim,
+``kernels/ops.py``, is gone). Backend selection from the environment:
+``REPRO_BACKEND=xla|pallas|im2col`` (``REPRO_USE_PALLAS=1`` still honored,
+deprecated).
 
-``kernels/ops.py`` remains as a one-PR deprecation shim forwarding
-``use_pallas=`` calls here.
+Instrumented entries also declare a measured-HBM-words counter: every conv
+and matmul ``DispatchDecision`` reports the words its launch geometry moves
+next to the plan's Thm 2.1 lower bound (``decision.measured_words``,
+``decision.bound_ratio``, ``ops.explain(...).why()``).
 """
 
 from .context import (  # noqa: F401

@@ -60,10 +60,10 @@ def env_backend() -> Optional[str]:
     name = os.environ.get(BACKEND_ENV)
     if name:
         name = name.strip().lower()
-        if name not in ("xla", "pallas"):
+        if name not in ("xla", "pallas", "im2col"):
             raise ValueError(
                 f"{BACKEND_ENV}={name!r} is not a known backend "
-                "(expected 'xla' or 'pallas')")
+                "(expected 'xla', 'pallas', or 'im2col')")
         return name
     legacy = os.environ.get(LEGACY_BACKEND_ENV)
     if legacy is not None:

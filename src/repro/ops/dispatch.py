@@ -36,29 +36,47 @@ MAX_FALLBACK_DEPTH = 4  # registry misconfiguration guard, not a real limit
 
 @dataclasses.dataclass(frozen=True)
 class DispatchDecision:
-    """Why one call ran where it did.
+    """Why one call ran where it did — and what it moved.
 
     ``requested`` is the backend the context resolved to; ``chosen`` the one
     that actually served the call; ``missing`` the capabilities whose absence
     forced each fallback hop (empty when ``chosen == requested``); ``plan``
     the ExecutionPlan the chosen entry consumed (None for closed-form ops and
-    for XLA entries, which delegate tiling to the compiler)."""
+    for XLA entries, which delegate tiling to the compiler);
+    ``measured_words`` the HBM words (32-bit) the chosen kernel's launch
+    geometry moves for this call (None when the entry is not instrumented),
+    reported next to the plan's Thm 2.1 ``lower_bound`` via
+    ``bound_ratio``."""
 
     op: str
     requested: str
     chosen: str
     missing: Tuple[str, ...] = ()
     plan: Optional[Any] = None
+    measured_words: Optional[float] = None
 
     @property
     def fell_back(self) -> bool:
         return self.chosen != self.requested
 
+    @property
+    def bound_ratio(self) -> Optional[float]:
+        """measured HBM words / the plan's Thm 2.1 lower bound."""
+        if self.measured_words is None or self.plan is None:
+            return None
+        return self.measured_words / max(self.plan.lower_bound, 1.0)
+
     def why(self) -> str:
-        if not self.fell_back:
-            return f"{self.op}: ran on requested backend {self.chosen!r}"
-        return (f"{self.op}: {self.requested!r} lacks "
-                f"{', '.join(self.missing)}; fell back to {self.chosen!r}")
+        msg = (f"{self.op}: ran on requested backend {self.chosen!r}"
+               if not self.fell_back else
+               f"{self.op}: {self.requested!r} lacks "
+               f"{', '.join(self.missing)}; fell back to {self.chosen!r}")
+        if self.measured_words is not None:
+            msg += f"; measured {self.measured_words:.3e} HBM words"
+            if self.bound_ratio is not None:
+                msg += (f" = {self.bound_ratio:.2f}x the "
+                        f"{self.plan.lower_bound:.3e}-word lower bound")
+        return msg
 
 
 _TRACE: List[List[DispatchDecision]] = []  # stack of active recorders
@@ -104,16 +122,35 @@ def _resolve_entry(op: str, ctx: ExecutionContext, dtype: Optional[str],
         f"missing along the fallback chain: {missing})")
 
 
+def _attach_plan_and_words(entry: OpEntry, decision: DispatchDecision,
+                           ctx: ExecutionContext,
+                           spec_args: Optional[tuple],
+                           spec_kw: Optional[dict]) -> DispatchDecision:
+    """Solve the entry's LP plan and measured-HBM-words counter (both need
+    only shapes/dtypes, so tracers and ShapeDtypeStructs work)."""
+    if spec_args is None:
+        return decision
+    kw = spec_kw or {}
+    if entry.spec_fn is not None:
+        decision = dataclasses.replace(
+            decision, plan=ctx.plan(entry.spec_fn(*spec_args, **kw)))
+    if entry.words_fn is not None:
+        decision = dataclasses.replace(
+            decision,
+            measured_words=entry.words_fn(ctx, decision.plan,
+                                          *spec_args, **kw))
+    return decision
+
+
 def resolve(op: str, ctx: Optional[ExecutionContext] = None,
             dtype: Optional[str] = None, needs: Tuple[str, ...] = (),
             spec_args: Optional[tuple] = None, spec_kw: Optional[dict] = None
             ) -> Tuple[OpEntry, DispatchDecision]:
-    """Capability-resolve one call; solve the entry's LP plan if it has one."""
+    """Capability-resolve one call; solve the entry's LP plan and measured
+    HBM-word counter if it declares them."""
     ctx = default_context() if ctx is None else ctx
     entry, decision = _resolve_entry(op, ctx, dtype, tuple(needs))
-    if entry.spec_fn is not None and spec_args is not None:
-        plan = ctx.plan(entry.spec_fn(*spec_args, **(spec_kw or {})))
-        decision = dataclasses.replace(decision, plan=plan)
+    decision = _attach_plan_and_words(entry, decision, ctx, spec_args, spec_kw)
     for log in _TRACE:
         log.append(decision)
     return entry, decision
@@ -124,15 +161,13 @@ def explain(op: str, ctx: Optional[ExecutionContext] = None,
             spec_args: Optional[tuple] = None,
             spec_kw: Optional[dict] = None) -> DispatchDecision:
     """The decision ``resolve`` would make, without executing anything.
-    ``spec_args``/``spec_kw`` mirror ``resolve`` so the reported plan is the
-    one the dispatched kernel would consume (e.g. conv2d needs stride=)."""
+    ``spec_args``/``spec_kw`` mirror ``resolve`` so the reported plan and
+    measured words are the ones the dispatched kernel would consume (e.g.
+    conv2d needs stride=); ``jax.ShapeDtypeStruct`` spec_args work since
+    only shapes/dtypes are consulted."""
     ctx = default_context() if ctx is None else ctx
     entry, decision = _resolve_entry(op, ctx, dtype, tuple(needs))
-    if entry.spec_fn is not None and spec_args is not None:
-        decision = dataclasses.replace(
-            decision, plan=ctx.plan(entry.spec_fn(*spec_args,
-                                                  **(spec_kw or {}))))
-    return decision
+    return _attach_plan_and_words(entry, decision, ctx, spec_args, spec_kw)
 
 
 # ---------------------------------------------------------------------------
@@ -147,19 +182,23 @@ def matmul(a, b, ctx: Optional[ExecutionContext] = None, out_dtype=None):
     """C[m,n] = A @ B through the dispatched backend; ``out_dtype`` defaults
     to the target precision policy's accumulator dtype."""
     ctx = default_context() if ctx is None else ctx
-    entry, dec = resolve("matmul", ctx, dtype=str(a.dtype), spec_args=(a, b))
-    return entry.fn(ctx, dec.plan, a, b,
-                    out_dtype=out_dtype or ctx.acc_dtype)
+    out_dtype = out_dtype or ctx.acc_dtype
+    # out_dtype rides in spec_kw so the measured-words counter charges the
+    # store stream at the dtype the kernel actually writes
+    entry, dec = resolve("matmul", ctx, dtype=str(a.dtype), spec_args=(a, b),
+                         spec_kw={"out_dtype": out_dtype})
+    return entry.fn(ctx, dec.plan, a, b, out_dtype=out_dtype)
 
 
 def conv2d(x, w, stride=(1, 1), ctx: Optional[ExecutionContext] = None,
            out_dtype=None):
     """Direct 7NL convolution (VALID padding) through the dispatched backend."""
     ctx = default_context() if ctx is None else ctx
+    out_dtype = out_dtype or ctx.acc_dtype
     entry, dec = resolve("conv2d", ctx, dtype=str(x.dtype),
-                         spec_args=(x, w), spec_kw={"stride": stride})
-    return entry.fn(ctx, dec.plan, x, w, stride=stride,
-                    out_dtype=out_dtype or ctx.acc_dtype)
+                         spec_args=(x, w),
+                         spec_kw={"stride": stride, "out_dtype": out_dtype})
+    return entry.fn(ctx, dec.plan, x, w, stride=stride, out_dtype=out_dtype)
 
 
 def conv1d_causal(x, w, ctx: Optional[ExecutionContext] = None):

@@ -8,7 +8,7 @@ backend's fallback chain until an entry's capabilities cover the call — this
 replaces the ad-hoc ``if use_pallas and cache is None and key_mask is None``
 branches that used to live in ``models/layers.py``.
 
-Two backends ship:
+Three backends ship:
 
   * ``xla``    - pure jnp/lax reference path. Universal: every capability
                  flag, every dtype; the terminal fallback.
@@ -19,10 +19,17 @@ Two backends ship:
                  folding query groups into the sequence axis — K/V are never
                  materialized repeated in HBM (the old wrapper's
                  ``jnp.repeat`` cost g x the KV stream traffic).
+  * ``im2col`` - the paper's baseline conv algorithm (materialized patches
+                 -> LP-tiled Pallas GEMM), conv2d only, falling through to
+                 ``xla`` for everything else. Exists so benchmarks can
+                 dispatch the algorithm the §5 tiling is measured against.
 
 Adapters take ``(ctx, plan, *args, **kw)``: ``plan`` is the ExecutionPlan the
 dispatcher resolved from the entry's ``spec_fn`` (None for ops whose tiling is
-closed-form), so plan -> precision -> kernel is connected in one place.
+closed-form), so plan -> precision -> kernel is connected in one place. An
+entry may also declare a ``words_fn`` — the measured-HBM-words counter for
+the launch geometry the kernel would lower — which the dispatcher attaches to
+the :class:`DispatchDecision` next to the plan's Thm 2.1 lower bound.
 """
 
 from __future__ import annotations
@@ -34,9 +41,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.conv1d import conv1d_causal as _conv1d_pallas
-from repro.kernels.conv2d import _conv_spec, conv2d as _conv2d_pallas
+from repro.kernels.conv2d import (_conv_spec, conv2d as _conv2d_pallas,
+                                  conv2d_hbm_words)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
-from repro.kernels.matmul import _matmul_spec, matmul as _matmul_pallas
+from repro.kernels.im2col import conv2d_im2col, im2col_hbm_words
+from repro.kernels.matmul import (_matmul_spec, matmul as _matmul_pallas,
+                                  matmul_hbm_words)
 from repro.kernels import ref
 
 from .context import ExecutionContext
@@ -77,6 +87,10 @@ class OpEntry:
     # builds the planner OpSpec from the call's arrays; None = closed-form
     # tiling (conv1d lane widths, flash-attention blocks), no LP plan.
     spec_fn: Optional[Callable] = None
+    # measured HBM words the kernel's launch geometry moves for this call:
+    # (ctx, plan, *spec_args, **spec_kw) -> float. None = not instrumented
+    # (XLA entries delegate data movement to the compiler).
+    words_fn: Optional[Callable] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,11 +125,13 @@ def backends() -> Tuple[str, ...]:
 
 
 def registered_ops() -> Tuple[str, ...]:
-    """Op names served by every registered backend (the dispatchable set)."""
-    names = None
+    """Op names dispatchable from any backend (the union: every fallback
+    chain terminates at ``xla``, which serves everything, so a partial
+    backend like ``im2col`` widens nothing but narrows nothing either)."""
+    names = set()
     for b in _BACKENDS.values():
-        names = set(b.ops) if names is None else names & set(b.ops)
-    return tuple(sorted(names or ()))
+        names |= set(b.ops)
+    return tuple(sorted(names))
 
 
 # ---------------------------------------------------------------------------
@@ -287,15 +303,63 @@ def _pallas_attention(ctx, plan, q, k, v, causal=True, q_offset=0,
                                          q_offset=q_offset), q, k, v)
 
 
+def _pallas_matmul_words(ctx, plan, a, b, out_dtype=None, **kw):
+    return matmul_hbm_words(a, b, plan=plan, target=ctx.target,
+                            out_dtype=out_dtype or ctx.acc_dtype)
+
+
+def _pallas_conv2d_words(ctx, plan, x, w, stride=(1, 1), out_dtype=None,
+                         **kw):
+    return conv2d_hbm_words(x, w, stride=stride, plan=plan,
+                            target=ctx.target,
+                            out_dtype=out_dtype or ctx.acc_dtype)
+
+
 register_backend(Backend(
     name="pallas",
     fallback="xla",
     ops={
-        "matmul": OpEntry(_pallas_matmul, spec_fn=_matmul_plan_spec),
-        "conv2d": OpEntry(_pallas_conv2d, spec_fn=_conv2d_plan_spec),
+        "matmul": OpEntry(_pallas_matmul, spec_fn=_matmul_plan_spec,
+                          words_fn=_pallas_matmul_words),
+        "conv2d": OpEntry(_pallas_conv2d, spec_fn=_conv2d_plan_spec,
+                          words_fn=_pallas_conv2d_words),
         "conv1d_causal": OpEntry(_pallas_conv1d),
         # flash kernel: static scalar q_offset only, no key masks -> the
         # in-cache decode path falls back to xla by capability.
         "attention": OpEntry(_pallas_attention, OpCapabilities()),
+    },
+))
+
+
+# ---------------------------------------------------------------------------
+# Im2Col backend: the paper's baseline conv algorithm as a third dispatchable
+# conv2d entry (patches materialized in XLA, GEMM on the LP-tiled Pallas
+# matmul). Every other op falls through the chain to xla.
+# ---------------------------------------------------------------------------
+
+def _im2col_conv2d(ctx, plan, x, w, stride=(1, 1), out_dtype=jnp.float32):
+    return _with_xla_vjp(
+        lambda x_, w_: conv2d_im2col(x_, w_, stride=stride,
+                                     out_dtype=out_dtype, target=ctx.target,
+                                     interpret=ctx.interpret),
+        lambda x_, w_: ref.conv2d_ref(x_, w_, stride=stride,
+                                      out_dtype=out_dtype), x, w)
+
+
+def _im2col_conv2d_words(ctx, plan, x, w, stride=(1, 1), out_dtype=None,
+                         **kw):
+    return im2col_hbm_words(x, w, stride=stride, target=ctx.target,
+                            out_dtype=out_dtype or ctx.acc_dtype)
+
+
+register_backend(Backend(
+    name="im2col",
+    fallback="xla",
+    ops={
+        # spec_fn resolves the same conv plan as the direct path so the
+        # decision reports the identical Thm 2.1 lower bound; the GEMM's own
+        # matmul plan is solved inside the kernel (memoized process-wide).
+        "conv2d": OpEntry(_im2col_conv2d, spec_fn=_conv2d_plan_spec,
+                          words_fn=_im2col_conv2d_words),
     },
 ))

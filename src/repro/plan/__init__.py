@@ -8,7 +8,7 @@ processor grids (§3.2 eq. 6, §4.2, §5) — behind one API:
 
     ep = plan(ConvSpec(N=32, c_I=64, c_O=64, w_O=56, h_O=56, w_F=3, h_F=3),
               TPU_V5E)
-    ep.tiles          # (bN, b_cI, b_cO) for the Pallas kernel
+    ep.tiles          # (bN, b_cI, b_cO, b_hO, b_wO) for the Pallas kernel
     ep.comm_volume    # modeled HBM<->VMEM words
     ep.efficiency     # vs the Thm 2.1 lower bound
     ep.sharding       # PartitionSpecs when the target has mesh axes

@@ -21,23 +21,29 @@ from typing import Any, Dict, Optional, Tuple, Union
 from repro.core.bounds import single_processor_bound
 from repro.core.conv_model import ConvShape, Precision, ceil_div, round_up
 from repro.core.sharding_opt import ShardingPlan, plan_conv_sharding
-from repro.core.tiling import (Blocking, matmul_blocking, optimize_blocking,
-                               snap_tile)
+from repro.core.tiling import (Blocking, conv_kernel_footprints,
+                               fit_conv_kernel_tiles, matmul_blocking,
+                               optimize_blocking, snap_tile)
 
 from .ops import ConvSpec, MatmulSpec, OpSpec, as_op_spec, op_from_dict
 from .target import HardwareTarget, TPU_V5E
 
-PLAN_FORMAT_VERSION = 1
+# v2: conv tiles/grid widened from (bN, b_cI, b_cO) / 3-axis grids to the
+# spatial-blocked (bN, b_cI, b_cO, b_hO, b_wO) / 5-axis form. v1 conv dumps
+# are upgraded on load (spatial kept whole, the old kernel behavior).
+PLAN_FORMAT_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """Everything a consumer needs to execute one op on one target.
 
-    ``tiles`` is the kernel-facing triple — (bN, b_cI, b_cO) for conv,
-    (bm, bn, bk) for matmul — and ``blocking`` the full 9-axis integer LP
-    solution it was collapsed from. ``grid`` is the Pallas launch grid over
-    the padded problem. ``sharding`` is present iff the target has mesh axes.
+    ``tiles`` is the kernel-facing tuple — (bN, b_cI, b_cO, b_hO, b_wO) for
+    conv (spatial blocks included: the kernel loads overlapping halo windows
+    of (b_hO - 1) * sh + h_F input rows), (bm, bn, bk) for matmul — and
+    ``blocking`` the full 9-axis integer LP solution it was collapsed from.
+    ``grid`` is the Pallas launch grid over the padded problem. ``sharding``
+    is present iff the target has mesh axes.
     """
 
     op: OpSpec
@@ -65,10 +71,10 @@ class ExecutionPlan:
     def as_blocking(self) -> Blocking:
         return Blocking(self.blocking_dict, self.to_shape())
 
-    def conv_tiles(self) -> Tuple[int, int, int]:
+    def conv_tiles(self) -> Tuple[int, int, int, int, int]:
         if not isinstance(self.op, ConvSpec):
             raise TypeError("conv_tiles() on a non-conv plan")
-        return self.tiles  # (bN, b_cI, b_cO)
+        return self.tiles  # (bN, b_cI, b_cO, b_hO, b_wO)
 
     def matmul_tiles(self) -> Tuple[int, int, int]:
         if not isinstance(self.op, MatmulSpec):
@@ -86,32 +92,37 @@ class ExecutionPlan:
         return {"input": blk.in_block_words, "filter": blk.filt_block_words,
                 "output": blk.out_block_words}
 
-    def pallas_specs(self, input_hw: Optional[Tuple[int, int]] = None):
+    def kernel_footprints(self) -> Dict[str, float]:
+        """Words the lowered conv2d kernel actually allocates per tile: the
+        exact halo window ((b_hO - 1) * sh + h_F) x ((b_wO - 1) * sw + w_F)
+        for the input and the full unrolled (h_F, w_F) filter block — the
+        view ``fit_conv_kernel_tiles`` clamped the tiles against."""
+        if not isinstance(self.op, ConvSpec):
+            raise TypeError("kernel_footprints() on a non-conv plan")
+        return conv_kernel_footprints(self.to_shape(), self.tiles)
+
+    def pallas_specs(self):
         """(grid, in_specs, out_specs) mirroring what the kernels lower.
         Lazy pallas import so plan inspection works without a jax runtime.
 
-        For conv, the input block's spatial extent depends on the actual
-        array: pass ``input_hw=(H, W)`` to match a concrete call; the default
-        is the minimal VALID extent ``s*(o-1)+f``, which is smaller than the
-        kernel's block whenever the input carries unused trailing rows/cols."""
+        Both kernels keep their inputs in ANY/HBM memory and stream
+        double-buffered DMA windows into VMEM scratch themselves (the conv
+        input needs overlapping halo windows, which no blocked BlockSpec can
+        express), so the in_specs carry only the memory space; the output
+        spec is blocked as before."""
         from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
 
+        in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
+                    pl.BlockSpec(memory_space=pltpu.ANY)]
         if isinstance(self.op, MatmulSpec):
             bm, bn, bk = self.tiles
-            return (self.grid,
-                    [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-                     pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+            return (self.grid, in_specs,
                     pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
-        op = self.op
-        bN, b_cI, b_cO = self.tiles
-        H, W = input_hw if input_hw is not None else (
-            op.sh * (op.h_O - 1) + op.h_F, op.sw * (op.w_O - 1) + op.w_F)
-        return (self.grid,
-                [pl.BlockSpec((bN, b_cI, H, W), lambda n, co, ci: (n, ci, 0, 0)),
-                 pl.BlockSpec((b_cO, b_cI, op.h_F, op.w_F),
-                              lambda n, co, ci: (co, ci, 0, 0))],
-                pl.BlockSpec((bN, b_cO, op.h_O, op.w_O),
-                             lambda n, co, ci: (n, co, 0, 0)))
+        bN, b_cI, b_cO, b_hO, b_wO = self.tiles
+        return (self.grid, in_specs,
+                pl.BlockSpec((bN, b_cO, b_hO, b_wO),
+                             lambda n, co, h, w, ci: (n, co, h, w)))
 
     # -- (de)serialization ----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -145,6 +156,12 @@ class ExecutionPlan:
         if d.get("version", 1) > PLAN_FORMAT_VERSION:
             raise ValueError(f"plan format {d['version']} is newer than "
                              f"supported {PLAN_FORMAT_VERSION}")
+        if d.get("version", 1) < 2 and d["op"].get("kind") == "conv":
+            # v1 conv plans: 3-tuple tiles, (nN, n_cO, n_cI) grid. Upgrade to
+            # the spatial-blocked form with spatial kept whole.
+            op = d["op"]
+            d = dict(d, tiles=list(d["tiles"]) + [op["h_O"], op["w_O"]],
+                     grid=[d["grid"][0], d["grid"][1], 1, 1, d["grid"][2]])
         sharding = None
         if d.get("sharding") is not None:
             s = d["sharding"]
@@ -231,10 +248,15 @@ def _plan_conv(op: ConvSpec, target: HardwareTarget) -> ExecutionPlan:
     mem = target.memory_model()
     blk = optimize_blocking(shape, mem, align=_conv_align(shape, target))
     t = blk.as_conv_tile()
-    # v1 kernels keep spatial whole: the LP's spatial choice folds into bN
-    # (see kernels/conv2d.py module docstring).
-    tiles = (max(1, min(op.N, t["N"])), t["cI"], t["cO"])
+    # Kernel tiles carry the LP's spatial choice: the kernel blocks h_O/w_O
+    # with overlapping input halos of (b - 1) * s + f rows/cols. The lifted
+    # LP footprint can undercount the kernel's (it may block filter taps the
+    # kernel unrolls in full), so clamp against the exact halo-window model.
+    tiles = fit_conv_kernel_tiles(shape, (
+        max(1, min(op.N, t["N"])), t["cI"], t["cO"],
+        max(1, min(op.h_O, t["hO"])), max(1, min(op.w_O, t["wO"]))), mem)
     grid = (ceil_div(op.N, tiles[0]), ceil_div(op.c_O, tiles[2]),
+            ceil_div(op.h_O, tiles[3]), ceil_div(op.w_O, tiles[4]),
             ceil_div(op.c_I, tiles[1]))
     vol = blk.comm_volume()
     lb = single_processor_bound(shape, mem.M_eff).value

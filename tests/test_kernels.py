@@ -69,16 +69,61 @@ def test_conv2d_sweep(case, dtype):
 
 
 def test_conv2d_tiles_from_lp_fit_vmem():
-    """The LP tile triple must keep the blocks inside half-VMEM."""
+    """The kernel tiles (halo windows included) must fit inside half-VMEM."""
     from repro.core.tiling import TPU_VMEM_WORDS
     N, cI, cO, hO, wO, hF, wF = 64, 64, 256, 56, 56, 3, 3
     spec = ConvSpec(N=N, c_I=cI, c_O=cO, w_O=wO, h_O=hO, w_F=wF, h_F=hF,
                     prec=Precision(0.5, 0.5, 1.0))
-    bN, bcI, bcO = plan(spec, TPU_V5E).conv_tiles()
-    H, W = hO + hF - 1, wO + wF - 1
-    words = (0.5 * bN * bcI * H * W + 0.5 * bcO * bcI * hF * wF
-             + 1.0 * bN * bcO * hO * wO)
+    ep = plan(spec, TPU_V5E)
+    bN, bcI, bcO, bh, bw = ep.conv_tiles()
+    assert all(b >= 1 for b in ep.conv_tiles())
+    fp = ep.kernel_footprints()
+    words = (0.5 * bN * bcI * ((bh - 1) + hF) * ((bw - 1) + wF)
+             + 0.5 * bcO * bcI * hF * wF + 1.0 * bN * bcO * bh * bw)
+    assert words == pytest.approx(sum(fp.values()))
     assert words <= TPU_VMEM_WORDS / 2 * 1.01
+
+
+@pytest.mark.parametrize("tiles", [
+    (1, 4, 8, 5, 7),      # spatial blocks with halo overlap, ragged edges
+    (2, 4, 8, 1, 23),     # single-row blocks (maximal halo reuse on h)
+    (1, 4, 8, 23, 4),     # w-only spatial tiling
+])
+@pytest.mark.parametrize("stride", [(1, 1), (2, 2), (2, 1)])
+def test_conv2d_spatial_tiling_agrees(tiles, stride):
+    """Halo-aware spatial tiling vs the XLA oracle: stride > 1, block sizes
+    that do not divide h_O/w_O, and windows sharing h_F - s row halos."""
+    x = jax.random.normal(KEY, (2, 4, 25, 25), jnp.float32)
+    w = jax.random.normal(K2, (8, 4, 3, 3), jnp.float32)
+    got = conv2d(x, w, stride=stride, tiles=tiles)
+    want = ref.conv2d_ref(x, w, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_no_halo_when_unit_filter():
+    """h_F == w_F == 1: windows are disjoint (halo = h_F - s <= 0), spatial
+    tiling degenerates to plain blocking and must still agree."""
+    x = jax.random.normal(KEY, (2, 6, 16, 16), jnp.float32)
+    w = jax.random.normal(K2, (8, 6, 1, 1), jnp.float32)
+    for stride in ((1, 1), (2, 2)):
+        got = conv2d(x, w, stride=stride, tiles=(1, 6, 8, 3, 5))
+        want = ref.conv2d_ref(x, w, stride=stride)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_plan_tiles_spatial_when_footprint_demands():
+    """A batch-1 megapixel conv cannot shrink N or c_O any further, so the
+    LP has to block the spatial axes — the v1 full-extent kernel could not
+    have run this shape inside VMEM at all."""
+    spec = ConvSpec(N=1, c_I=8, c_O=8, w_O=512, h_O=512, w_F=3, h_F=3,
+                    prec=Precision(0.5, 0.5, 1.0))
+    ep = plan(spec, TPU_V5E)
+    bN, bcI, bcO, bh, bw = ep.conv_tiles()
+    assert bh < 512 or bw < 512
+    from repro.core.tiling import TPU_VMEM_WORDS
+    assert sum(ep.kernel_footprints().values()) <= TPU_VMEM_WORDS / 2 * 1.01
 
 
 # ---------------------------------------------------------------------------

@@ -65,6 +65,22 @@ def test_plan_json_roundtrip(op, target):
         assert back.sharding.output_spec == ep.sharding.output_spec
 
 
+def test_v1_conv_plan_json_upgrades():
+    """Pre-spatial-tiling (format v1) conv dumps carried 3-tuple tiles and a
+    3-axis grid; loading one must yield a working 5-tuple plan (spatial kept
+    whole, the old kernel behavior) instead of crashing the new accessors."""
+    ep = plan(CONV, TPU_V5E)
+    d = ep.to_dict()
+    d["version"] = 1
+    d["tiles"] = d["tiles"][:3]
+    d["grid"] = [d["grid"][0], d["grid"][1], d["grid"][4]]
+    back = ExecutionPlan.from_dict(d)
+    assert back.tiles == tuple(d["tiles"]) + (CONV.h_O, CONV.w_O)
+    assert len(back.grid) == 5
+    assert back.kernel_footprints()["output"] > 0
+    back.pallas_specs()
+
+
 def test_plan_cache_dump_load(tmp_path):
     ep = plan(CONV, TPU_V5E)
     path = str(tmp_path / "plans.json")
@@ -175,9 +191,18 @@ def test_hardware_target_from_dict_roundtrip():
 
 
 def test_plan_pallas_specs_shapes():
+    from jax.experimental.pallas import tpu as pltpu
+
     ep = plan(GEMM, TPU_V5E)
     grid, in_specs, out_spec = ep.pallas_specs()
     assert grid == ep.grid and len(in_specs) == 2
     bm, bn, bk = ep.tiles
-    assert in_specs[0].block_shape == (bm, bk)
+    # inputs stay in ANY/HBM (the kernels stream double-buffered DMA windows
+    # themselves); only the output block is lowered via a blocked BlockSpec
+    assert all(s.memory_space == pltpu.ANY for s in in_specs)
     assert out_spec.block_shape == (bm, bn)
+    cep = plan(CONV, TPU_V5E)
+    cgrid, _, cout = cep.pallas_specs()
+    assert cgrid == cep.grid and len(cgrid) == 5
+    bN, bcI, bcO, bh, bw = cep.conv_tiles()
+    assert cout.block_shape == (bN, bcO, bh, bw)
