@@ -1,0 +1,97 @@
+"""Benchmark-regression gate over the ``BENCH_*.json`` trajectory.
+
+Compares a freshly produced benchmark JSON (a list of record dicts, as
+emitted by ``conv_bench``/``dist_bench``) against the committed baseline in
+``benchmarks/baselines/``. Every numeric metric whose name ends in
+``_words`` or ``_ratio`` is a communication quantity where *lower is
+better*; the gate fails (exit 2) if any such metric grew more than the
+tolerance (default 10%) over its baseline value, or if a baseline row
+disappeared. New rows (new coverage) pass.
+
+CLI (wired after each CI bench step):
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_conv.json \\
+        benchmarks/baselines/BENCH_conv.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+TOLERANCE = 0.10
+
+# metrics where lower is better and a >tolerance increase is a regression
+_METRIC_SUFFIXES = ("_words", "_ratio")
+
+
+def _key(rec: dict) -> str:
+    """Stable row identity: dist records carry ``name``, conv ones ``layer``."""
+    return str(rec.get("name") or rec.get("layer") or rec.get("shape"))
+
+
+def _metrics(rec: dict) -> Dict[str, float]:
+    out = {}
+    for k, v in rec.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                and k.endswith(_METRIC_SUFFIXES):
+            out[k] = float(v)
+    return out
+
+
+def compare(current: List[dict], baseline: List[dict],
+            tolerance: float = TOLERANCE) -> List[Tuple[str, str]]:
+    """Regressions as (row key, description) pairs; empty = gate passes."""
+    cur = {_key(r): r for r in current}
+    problems: List[Tuple[str, str]] = []
+    for base_rec in baseline:
+        key = _key(base_rec)
+        if key not in cur:
+            problems.append((key, "row missing from current results"))
+            continue
+        cur_m = _metrics(cur[key])
+        for name, base_v in _metrics(base_rec).items():
+            if name not in cur_m:
+                problems.append((key, f"metric {name} missing"))
+                continue
+            cur_v = cur_m[name]
+            # guard the degenerate baseline (0 words: nothing may appear)
+            limit = base_v * (1.0 + tolerance) if base_v > 0 else 1e-9
+            if cur_v > limit:
+                pct = ((cur_v / base_v - 1.0) * 100) if base_v > 0 \
+                    else float("inf")
+                problems.append(
+                    (key, f"{name} regressed {pct:.1f}%: "
+                          f"{base_v:.4g} -> {cur_v:.4g}"))
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly produced BENCH_*.json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help="allowed fractional growth per metric "
+                         f"(default {TOLERANCE})")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    problems = compare(current, baseline, args.tolerance)
+    n_metrics = sum(len(_metrics(r)) for r in baseline)
+    if problems:
+        print(f"FAIL: {len(problems)} regression(s) vs {args.baseline}:",
+              file=sys.stderr)
+        for key, desc in problems:
+            print(f"  {key}: {desc}", file=sys.stderr)
+        return 2
+    print(f"OK: {len(baseline)} rows / {n_metrics} metrics within "
+          f"{args.tolerance:.0%} of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,11 @@ ResNet50 conv1 / conv2_x as a multiple of the combined Thm 2.2/2.3 bound,
 swept over processor count P.
 
 Paper setting: p_I = p_F = 1, p_O = 2, batch 1000.
+
+These are the *symbolic* per-processor volumes; ``benchmarks/dist_bench.py``
+is the measured companion — the same shapes executed as a halo-exchange conv
+under ``shard_map`` on an 8-fake-device mesh (``repro.distributed``), with
+inter-device words counted from the launch geometry.
 """
 
 from __future__ import annotations

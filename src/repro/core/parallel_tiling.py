@@ -43,6 +43,19 @@ class ParallelBlocking:
     grid: Dict[str, int]  # axis -> number of processors splitting that axis
     shape: ConvShape
 
+    @classmethod
+    def from_grid(cls, shape: ConvShape, grid: Dict[str, int]
+                  ) -> "ParallelBlocking":
+        """Build from a partial axis->procs mapping (unlisted axes get 1) —
+        the form tests and ``repro.distributed`` pass grids around in."""
+        full = {k: 1 for k in PAR_AXES}
+        for k, v in grid.items():
+            if k not in PAR_AXES:
+                raise ValueError(f"unknown loop axis {k!r} "
+                                 f"(expected one of {PAR_AXES})")
+            full[k] = int(v)
+        return cls(full, shape)
+
     @property
     def P(self) -> int:
         return math.prod(self.grid.values())

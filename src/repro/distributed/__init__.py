@@ -1,0 +1,35 @@
+"""``repro.distributed`` — the paper's §4.2 parallel blocking, executed.
+
+Takes a :class:`~repro.core.parallel_tiling.ParallelBlocking` (the integer
+processor grid the parallel LP chose), snaps it onto a ``jax`` device mesh
+(``repro.launch.make_conv_mesh``), and runs conv2d under ``shard_map``:
+halo rows ``ppermute``-fetched from spatial neighbors, cI partials reduced
+with ``psum``, and the shard-local conv dispatched through the ``repro.ops``
+registry (op ``conv2d_dist``, backends ``xla``/``pallas``) so each shard
+runs the PR-4 LP-tiled Pallas kernel.
+
+    from repro import distributed, ops
+    from repro.launch import fake_devices, make_conv_mesh
+
+    fake_devices(8)                       # before jax initializes
+    pb = distributed.default_blocking(x.shape, w.shape, stride=(1, 1))
+    mesh = make_conv_mesh(pb)
+    y = ops.conv2d_dist(x, w, blocking=pb, mesh=mesh)   # registry dispatch
+
+``conv2d_dist_comm_words`` / ``allgather_comm_words`` report the measured
+inter-device words per device from the identical launch geometry — the
+numbers ``benchmarks/dist_bench.py`` compares against the Thm 2.2/2.3 bound.
+"""
+
+from .geometry import (  # noqa: F401
+    DIST_AXES,
+    DistConvGeometry,
+    dist_grid,
+)
+from .halo import (  # noqa: F401
+    allgather_comm_words,
+    allgather_conv,
+    conv2d_dist_comm_words,
+    default_blocking,
+    halo_conv,
+)

@@ -196,6 +196,41 @@ def conv2d(
     return out[:N, :c_O, :h_O, :w_O]
 
 
+def exact_window(H: int, W: int, h_F: int, w_F: int, sh: int, sw: int
+                 ) -> bool:
+    """True iff an (H, W) input extent is an *exact* halo window — every row
+    and column participates in some VALID output ((H - h_F) % sh == 0 and
+    likewise for W). Shard-local windows built by ``repro.distributed`` are
+    exact by construction; an inexact window there means halo rows were
+    mis-exchanged, so the distributed path asserts this before dispatch."""
+    return (H - h_F) % sh == 0 and (W - w_F) % sw == 0
+
+
+def conv2d_shard(
+    x: jax.Array,  # (bN, b_cI, (b_hO-1)*sh + h_F, (b_wO-1)*sw + w_F)
+    w: jax.Array,  # (c_O, b_cI, h_F, w_F)
+    stride: Tuple[int, int] = (1, 1),
+    out_dtype=jnp.float32,
+    plan: Optional[ExecutionPlan] = None,
+    target: Optional[HardwareTarget] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Shard-local entry for ``repro.distributed``: the same LP-tiled kernel
+    as :func:`conv2d`, but the input must be an exact halo window (the shape
+    each shard assembles after its ``ppermute`` exchanges — no dead rows).
+    Plans resolve for the *local* shape, so each shard tiles its own block."""
+    N, c_I, H, W = x.shape
+    _, _, h_F, w_F = w.shape
+    sh, sw = stride
+    if not exact_window(H, W, h_F, w_F, sh, sw):
+        raise ValueError(
+            f"shard-local conv window ({H}, {W}) is not exact for filter "
+            f"({h_F}, {w_F}) stride ({sh}, {sw}): halo rows were "
+            "mis-exchanged upstream")
+    return conv2d(x, w, stride=stride, out_dtype=out_dtype, plan=plan,
+                  target=target, interpret=interpret)
+
+
 def conv2d_hbm_words(
     x,  # array or ShapeDtypeStruct, (N, c_I, H, W)
     w,  # array or ShapeDtypeStruct, (c_O, c_I, h_F, w_F)

@@ -1,2 +1,7 @@
-"""Launchers: production mesh, multi-pod dry-run, train/serve drivers."""
-from .mesh import make_host_mesh, make_production_mesh  # noqa: F401
+"""Launchers: production mesh, conv mesh, fake devices, dry-run, drivers."""
+from .devices import fake_devices  # noqa: F401
+from .mesh import (  # noqa: F401
+    make_conv_mesh,
+    make_host_mesh,
+    make_production_mesh,
+)

@@ -1,8 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=" +
-                           os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
-# ^ MUST precede any jax import: jax locks the device count on first init.
+
+from repro.launch.devices import fake_devices
+
+fake_devices(int(os.environ.get("REPRO_DRYRUN_DEVICES", "512")))
+# ^ MUST precede the jax backend init below: jax locks the device count on
+# first init (fake_devices raises a clear error if something beat us to it).
 
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402

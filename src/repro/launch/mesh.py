@@ -1,11 +1,13 @@
 """Production mesh construction.
 
 A function, not a module-level constant: importing this module never touches
-jax device state (device count is locked on first jax init, and only
-dryrun.py sets the 512-fake-device XLA flag).
+jax device state (device count is locked on first jax init; consumers that
+need fake host devices call ``repro.launch.fake_devices`` first).
 """
 
 from __future__ import annotations
+
+import math
 
 import jax
 
@@ -22,3 +24,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_conv_mesh(blocking):
+    """Snap a conv processor grid onto a device mesh for ``shard_map``.
+
+    ``blocking`` is a :class:`repro.core.parallel_tiling.ParallelBlocking`
+    (or a plain axis->procs dict). The mesh always carries the four axes the
+    distributed conv lowering shards over — ``("N", "cI", "hO", "wO")``, in
+    that order, size 1 for unsplit axes — and uses the first ``P`` available
+    devices (``P`` = the grid's processor count), so grids smaller than the
+    host's device count work."""
+    from repro.distributed.geometry import DIST_AXES, dist_grid
+
+    sizes = dist_grid(blocking)
+    P = math.prod(sizes)
+    devs = jax.devices()
+    if P > len(devs):
+        raise ValueError(
+            f"blocking grid {dict(zip(DIST_AXES, sizes))} needs {P} devices "
+            f"but only {len(devs)} exist (launch.fake_devices(n) must run "
+            f"before jax initializes)")
+    return jax.make_mesh(sizes, DIST_AXES, devices=devs[:P])

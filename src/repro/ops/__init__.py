@@ -28,10 +28,14 @@ booleans that used to thread through the model stack (the last shim,
 ``REPRO_BACKEND=xla|pallas|im2col`` (``REPRO_USE_PALLAS=1`` still honored,
 deprecated).
 
-Instrumented entries also declare a measured-HBM-words counter: every conv
-and matmul ``DispatchDecision`` reports the words its launch geometry moves
-next to the plan's Thm 2.1 lower bound (``decision.measured_words``,
-``decision.bound_ratio``, ``ops.explain(...).why()``).
+Instrumented entries also declare a measured-words counter: every conv and
+matmul ``DispatchDecision`` reports the words its launch geometry moves next
+to the matching paper bound (``decision.measured_words``,
+``decision.bound_ratio``, ``ops.explain(...).why()``) — HBM words vs. the
+Thm 2.1 bound for single-device ops, per-device *inter-device* words vs. the
+Thm 2.2/2.3 parallel bound for ``conv2d_dist`` (the distributed
+halo-exchange conv of ``repro.distributed``, whose backend choice selects
+the shard-local kernel).
 """
 
 from .context import (  # noqa: F401
@@ -48,6 +52,7 @@ from .dispatch import (  # noqa: F401
     attention_needs,
     conv1d_causal,
     conv2d,
+    conv2d_dist,
     explain,
     matmul,
     record_dispatch,

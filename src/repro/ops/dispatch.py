@@ -43,10 +43,12 @@ class DispatchDecision:
     forced each fallback hop (empty when ``chosen == requested``); ``plan``
     the ExecutionPlan the chosen entry consumed (None for closed-form ops and
     for XLA entries, which delegate tiling to the compiler);
-    ``measured_words`` the HBM words (32-bit) the chosen kernel's launch
-    geometry moves for this call (None when the entry is not instrumented),
-    reported next to the plan's Thm 2.1 ``lower_bound`` via
-    ``bound_ratio``."""
+    ``measured_words`` the words the chosen kernel's launch geometry moves
+    for this call (None when the entry is not instrumented) — HBM words
+    (32-bit) for single-device ops, *inter-device* words per device for the
+    distributed ops — reported via ``bound_ratio`` against the matching
+    bound: the plan's Thm 2.1 ``lower_bound``, or the plan's ``parallel``
+    section's Thm 2.2/2.3 bound for ``*_dist`` ops."""
 
     op: str
     requested: str
@@ -60,11 +62,24 @@ class DispatchDecision:
         return self.chosen != self.requested
 
     @property
-    def bound_ratio(self) -> Optional[float]:
-        """measured HBM words / the plan's Thm 2.1 lower bound."""
-        if self.measured_words is None or self.plan is None:
+    def lower_bound(self) -> Optional[float]:
+        """The bound ``measured_words`` is compared against: Thm 2.2/2.3
+        (per-processor) for distributed ops, Thm 2.1 otherwise."""
+        if self.plan is None:
             return None
-        return self.measured_words / max(self.plan.lower_bound, 1.0)
+        if self.op.endswith("_dist"):
+            if self.plan.parallel is None:
+                return None  # planned for a single-device target
+            return self.plan.parallel.lower_bound
+        return self.plan.lower_bound
+
+    @property
+    def bound_ratio(self) -> Optional[float]:
+        """measured words / the matching communication lower bound."""
+        lb = self.lower_bound
+        if self.measured_words is None or lb is None:
+            return None
+        return self.measured_words / max(lb, 1.0)
 
     def why(self) -> str:
         msg = (f"{self.op}: ran on requested backend {self.chosen!r}"
@@ -72,10 +87,11 @@ class DispatchDecision:
                f"{self.op}: {self.requested!r} lacks "
                f"{', '.join(self.missing)}; fell back to {self.chosen!r}")
         if self.measured_words is not None:
-            msg += f"; measured {self.measured_words:.3e} HBM words"
+            kind = ("inter-device" if self.op.endswith("_dist") else "HBM")
+            msg += f"; measured {self.measured_words:.3e} {kind} words"
             if self.bound_ratio is not None:
                 msg += (f" = {self.bound_ratio:.2f}x the "
-                        f"{self.plan.lower_bound:.3e}-word lower bound")
+                        f"{self.lower_bound:.3e}-word lower bound")
         return msg
 
 
@@ -199,6 +215,26 @@ def conv2d(x, w, stride=(1, 1), ctx: Optional[ExecutionContext] = None,
                          spec_args=(x, w),
                          spec_kw={"stride": stride, "out_dtype": out_dtype})
     return entry.fn(ctx, dec.plan, x, w, stride=stride, out_dtype=out_dtype)
+
+
+def conv2d_dist(x, w, stride=(1, 1), blocking=None, mesh=None,
+                ctx: Optional[ExecutionContext] = None, out_dtype=None):
+    """Distributed halo-exchange conv2d over a device mesh (paper §4.2).
+
+    ``blocking`` is the ``ParallelBlocking`` processor grid (LP-chosen over
+    all available devices when omitted) and ``mesh`` the matching conv mesh
+    (``launch.make_conv_mesh(blocking)`` when omitted). The backend picks the
+    *shard-local* kernel (``pallas`` = the LP-tiled PR-4 kernel); the
+    decision's ``measured_words`` are the per-device inter-device words
+    (halo + psum), ratioed against the plan's Thm 2.2/2.3 parallel bound."""
+    ctx = default_context() if ctx is None else ctx
+    out_dtype = out_dtype or ctx.acc_dtype
+    entry, dec = resolve(
+        "conv2d_dist", ctx, dtype=str(x.dtype), spec_args=(x, w),
+        spec_kw={"stride": stride, "out_dtype": out_dtype,
+                 "blocking": blocking, "mesh": mesh})
+    return entry.fn(ctx, dec.plan, x, w, stride=stride, out_dtype=out_dtype,
+                    blocking=blocking, mesh=mesh)
 
 
 def conv1d_causal(x, w, ctx: Optional[ExecutionContext] = None):

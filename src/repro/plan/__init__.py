@@ -28,6 +28,7 @@ from .ops import (  # noqa: F401
 from .planner import (  # noqa: F401
     PLAN_FORMAT_VERSION,
     ExecutionPlan,
+    ParallelSection,
     clear_plan_cache,
     load_plan_cache,
     plan,

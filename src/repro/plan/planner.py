@@ -18,8 +18,9 @@ import json
 import threading
 from typing import Any, Dict, Optional, Tuple, Union
 
-from repro.core.bounds import single_processor_bound
+from repro.core.bounds import combined_parallel_bound, single_processor_bound
 from repro.core.conv_model import ConvShape, Precision, ceil_div, round_up
+from repro.core.parallel_tiling import optimize_parallel_blocking
 from repro.core.sharding_opt import ShardingPlan, plan_conv_sharding
 from repro.core.tiling import (Blocking, conv_kernel_footprints,
                                fit_conv_kernel_tiles, matmul_blocking,
@@ -31,7 +32,43 @@ from .target import HardwareTarget, TPU_V5E
 # v2: conv tiles/grid widened from (bN, b_cI, b_cO) / 3-axis grids to the
 # spatial-blocked (bN, b_cI, b_cO, b_hO, b_wO) / 5-axis form. v1 conv dumps
 # are upgraded on load (spatial kept whole, the old kernel behavior).
-PLAN_FORMAT_VERSION = 2
+# v3: multi-device conv plans carry a ``parallel`` section (the integer
+# processor grid the parallel LP chose plus the predicted per-processor
+# words and the Thm 2.2/2.3 bound). v2 dumps load with parallel=None.
+PLAN_FORMAT_VERSION = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelSection:
+    """The distributed leg of a multi-device conv plan (paper §4.2).
+
+    ``grid`` is the integer processor grid the parallel LP chose (sorted
+    (axis, procs) pairs over the distributable axes), ``comm_words`` the
+    blocking model's predicted per-processor network words, and
+    ``lower_bound`` the combined Thm 2.2/2.3 per-processor bound at the
+    target's effective local capacity. ``repro.distributed`` lowers exactly
+    this grid onto a mesh; ``DispatchDecision.bound_ratio`` for the
+    ``conv2d_dist`` op divides measured inter-device words by this bound."""
+
+    grid: Tuple[Tuple[str, int], ...]  # sorted (axis, procs), procs > 1 only
+    P: int
+    comm_words: float
+    lower_bound: float
+
+    @property
+    def grid_dict(self) -> Dict[str, int]:
+        return dict(self.grid)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"grid": [list(kv) for kv in self.grid], "P": self.P,
+                "comm_words": self.comm_words,
+                "lower_bound": self.lower_bound}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ParallelSection":
+        return cls(grid=tuple((str(k), int(v)) for k, v in d["grid"]),
+                   P=int(d["P"]), comm_words=float(d["comm_words"]),
+                   lower_bound=float(d["lower_bound"]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +80,9 @@ class ExecutionPlan:
     of (b_hO - 1) * sh + h_F input rows), (bm, bn, bk) for matmul — and
     ``blocking`` the full 9-axis integer LP solution it was collapsed from.
     ``grid`` is the Pallas launch grid over the padded problem. ``sharding``
-    is present iff the target has mesh axes.
+    is present iff the target has mesh axes; conv plans for such targets
+    additionally carry ``parallel`` — the §4.2 processor grid + predicted
+    per-processor words that ``repro.distributed`` executes.
     """
 
     op: OpSpec
@@ -55,6 +94,7 @@ class ExecutionPlan:
     lower_bound: float  # Thm 2.1 bound at the target's effective capacity
     efficiency: float  # comm_volume / lower_bound
     sharding: Optional[ShardingPlan] = None
+    parallel: Optional[ParallelSection] = None
 
     # -- views ---------------------------------------------------------------
     @property
@@ -137,6 +177,8 @@ class ExecutionPlan:
             "lower_bound": self.lower_bound,
             "efficiency": self.efficiency,
             "sharding": None,
+            "parallel": (None if self.parallel is None
+                         else self.parallel.to_dict()),
         }
         if self.sharding is not None:
             s = self.sharding
@@ -171,6 +213,9 @@ class ExecutionPlan:
                 comm_per_processor=float(s["comm_per_processor"]),
                 grid={k: int(v) for k, v in s["grid"].items()},
             )
+        parallel = None
+        if d.get("parallel") is not None:  # absent in v1/v2 dumps
+            parallel = ParallelSection.from_dict(d["parallel"])
         return cls(
             op=op_from_dict(d["op"]),
             target=HardwareTarget.from_dict(d["target"]),
@@ -181,6 +226,7 @@ class ExecutionPlan:
             lower_bound=float(d["lower_bound"]),
             efficiency=float(d["efficiency"]),
             sharding=sharding,
+            parallel=parallel,
         )
 
     @classmethod
@@ -260,12 +306,31 @@ def _plan_conv(op: ConvSpec, target: HardwareTarget) -> ExecutionPlan:
             ceil_div(op.c_I, tiles[1]))
     vol = blk.comm_volume()
     lb = single_processor_bound(shape, mem.M_eff).value
-    sharding = (plan_conv_sharding(shape, target.mesh_axes)
-                if target.mesh_axes else None)
+    sharding = None
+    parallel = None
+    if target.mesh_axes:
+        sharding = plan_conv_sharding(shape, target.mesh_axes)
+        parallel = _parallel_section(shape, target.n_devices, mem.M_eff)
     return ExecutionPlan(
         op=op, target=target, blocking=tuple(sorted(blk.b.items())),
         tiles=tiles, grid=grid, comm_volume=vol, lower_bound=lb,
-        efficiency=vol / max(lb, 1.0), sharding=sharding)
+        efficiency=vol / max(lb, 1.0), sharding=sharding, parallel=parallel)
+
+
+def _parallel_section(shape: ConvShape, P: int, M_eff: float
+                      ) -> ParallelSection:
+    """The §4.2 leg of a multi-device conv plan: the parallel LP's integer
+    grid restricted to the axes ``repro.distributed`` can lower, its modeled
+    per-processor words, and the combined Thm 2.2/2.3 bound."""
+    # local import keeps repro.plan importable without the distributed pkg
+    from repro.distributed.geometry import DIST_AXES
+
+    pb = optimize_parallel_blocking(shape, P, restrict_axes=DIST_AXES)
+    return ParallelSection(
+        grid=tuple(sorted((k, v) for k, v in pb.grid.items() if v > 1)),
+        P=pb.P,
+        comm_words=pb.comm_per_processor(),
+        lower_bound=combined_parallel_bound(shape, P, M_eff))
 
 
 def _plan_matmul(op: MatmulSpec, target: HardwareTarget) -> ExecutionPlan:

@@ -45,6 +45,17 @@ def _op_case(op: str):
         return (jax.random.normal(KEY, (2, 8, 33, 16)) * 0.3,
                 jax.random.normal(K2, (2, 2, 33, 16)) * 0.3,
                 jax.random.normal(K3, (2, 2, 33, 16))), {"causal": True}
+    if op == "conv2d_dist":  # P=1 grid: the mesh is one device, so the
+        # sweep runs on any host; the real multi-device grids live in
+        # tests/test_distributed.py under the CI distributed job
+        from repro.core.conv_model import ConvShape
+        from repro.core.parallel_tiling import ParallelBlocking
+
+        shape = ConvShape(N=2, c_I=8, c_O=16, h_O=10, w_O=10, h_F=3, w_F=3)
+        return (jax.random.normal(KEY, (2, 8, 12, 12)),
+                jax.random.normal(K2, (16, 8, 3, 3))), {
+                    "stride": (1, 1),
+                    "blocking": ParallelBlocking.from_grid(shape, {})}
     raise NotImplementedError(
         f"op {op!r} is registered but has no agreement-sweep case; add one")
 
@@ -66,7 +77,7 @@ def test_backends_agree(op, backend):
 def test_every_registered_op_is_swept():
     assert set(ops.backends()) == {"xla", "pallas", "im2col"}
     assert set(ops.registered_ops()) == {
-        "matmul", "conv2d", "conv1d_causal", "attention"}
+        "matmul", "conv2d", "conv1d_causal", "attention", "conv2d_dist"}
     for op in ops.registered_ops():
         _op_case(op)  # raises if an op was registered without a sweep case
 

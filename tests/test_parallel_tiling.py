@@ -1,0 +1,87 @@
+"""core.parallel_tiling coverage (paper §4.2): integer grids factorize P
+exactly, per-processor blocks cover the shape, and the LP volumes agree with
+the fig3 sweep's ``parallel_volumes["blocking"]`` column."""
+
+import math
+
+import pytest
+
+from repro.core.algorithms import parallel_volumes
+from repro.core.conv_model import ConvShape, Precision, ceil_div, resnet50_layers
+from repro.core.parallel_tiling import (PAR_AXES, ParallelBlocking,
+                                        optimize_parallel_blocking)
+
+FIG3_PREC = Precision(1.0, 1.0, 2.0)
+FIG3_SHAPES = {k: v.with_precision(FIG3_PREC)
+               for k, v in resnet50_layers(1000).items()
+               if k in ("conv1", "conv2_x")}
+FIG3_P = (4, 16, 64, 256, 1024)
+
+SMALL = ConvShape(N=8, c_I=16, c_O=32, w_O=14, h_O=14, w_F=3, h_F=3)
+
+
+@pytest.mark.parametrize("lname", sorted(FIG3_SHAPES))
+@pytest.mark.parametrize("P", FIG3_P)
+def test_grid_multiplies_to_exactly_P(lname, P):
+    pb = optimize_parallel_blocking(FIG3_SHAPES[lname], P)
+    assert math.prod(pb.grid.values()) == P
+    assert pb.P == P
+
+
+@pytest.mark.parametrize("lname", sorted(FIG3_SHAPES))
+@pytest.mark.parametrize("P", (4, 64, 1024))
+def test_blocks_cover_the_shape(lname, P):
+    s = FIG3_SHAPES[lname]
+    pb = optimize_parallel_blocking(s, P)
+    dims = dict(zip(PAR_AXES, s.loop_bounds()))
+    for ax in PAR_AXES:
+        # grid never over-splits an axis ...
+        assert 1 <= pb.grid[ax] <= dims[ax]
+        # ... and ceil blocks tile it completely
+        assert pb.block(ax) * pb.grid[ax] >= dims[ax]
+        assert pb.block(ax) == ceil_div(dims[ax], pb.grid[ax])
+
+
+@pytest.mark.parametrize("lname", sorted(FIG3_SHAPES))
+@pytest.mark.parametrize("P", FIG3_P)
+def test_lp_volume_matches_fig3_blocking_column(lname, P):
+    s = FIG3_SHAPES[lname]
+    M = float(2 ** 20)
+    v = parallel_volumes(s, P, M)
+    pb = optimize_parallel_blocking(s, P)
+    assert pb.comm_per_processor() == pytest.approx(v["blocking"], rel=1e-12)
+
+
+def test_restrict_axes_only_splits_allowed_axes():
+    pb = optimize_parallel_blocking(SMALL, 8, restrict_axes=("N", "cI"))
+    for ax in PAR_AXES:
+        if ax not in ("N", "cI"):
+            assert pb.grid[ax] == 1
+    assert pb.P == 8
+
+
+def test_from_grid_fills_ones_and_validates():
+    pb = ParallelBlocking.from_grid(SMALL, {"hO": 2, "cI": 4})
+    assert pb.grid["hO"] == 2 and pb.grid["cI"] == 4
+    assert all(pb.grid[ax] == 1 for ax in PAR_AXES if ax not in ("hO", "cI"))
+    assert pb.P == 8
+    with pytest.raises(ValueError):
+        ParallelBlocking.from_grid(SMALL, {"bogus": 2})
+
+
+def test_comm_zero_only_without_real_traffic():
+    # pure data parallelism on N: every processor still gathers the filter
+    # and its input slab beyond what it owns -> nonneg, finite
+    pb = ParallelBlocking.from_grid(SMALL, {"N": 8})
+    assert pb.comm_per_processor() >= 0.0
+    # splitting a reduction axis doubles the output traffic
+    red = ParallelBlocking.from_grid(SMALL, {"cI": 2})
+    unsplit = ParallelBlocking.from_grid(SMALL, {"cO": 2})
+    assert red.comm_per_processor() > 0.0
+    assert unsplit.out_block_words < red.out_block_words * 2 + 1
+
+
+def test_imbalance_is_one_when_divisible():
+    s = ConvShape(N=8, c_I=16, c_O=32, w_O=16, h_O=16, w_F=3, h_F=3)
+    pb = ParallelBlocking.from_grid(s, {"N": 4, "cO": 2})
+    assert pb.imbalance() == pytest.approx(1.0)
