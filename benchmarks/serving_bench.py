@@ -1,38 +1,163 @@
-"""Serving throughput: slot-based continuous batching vs the wave-lockstep
-baseline on a mixed workload (short + long prompts, heterogeneous
-``max_new_tokens``) — the decode-axis analogue of the paper's
-keep-every-processor-busy argument.
+"""Serving benchmark: paged KV-cache decode vs the PR-2 slot-pool engine,
+with measured decode HBM words gated against the paper's attention bound.
 
-Both engines run the same corrected primitives and share compiled steps
-(``serving.engine._make_steps`` caches per (cfg, max_len, ctx)), so
-the measured difference is pure scheduling: the wave engine barriers a full
-batch until its slowest request drains, continuous batching refills freed
-slots mid-flight. A warmup pass populates the jit caches before timing.
+Two kinds of rows, mirroring ``conv_bench``:
 
-Rows:
-  serving/wave        - baseline tok/s (real generated tokens / wall clock)
-  serving/continuous  - slot engine tok/s on the identical workload
-  serving/speedup     - continuous over wave
+**Shape sweep (deterministic, gated).** Decode-state snapshots dispatched
+through ``ops.explain`` with ``jax.ShapeDtypeStruct`` specs under an explicit
+pallas context, so the records are identical on every CI leg regardless of
+``REPRO_BACKEND``. Each snapshot reports the paged ``attention_decode``
+kernel's measured HBM words (block-table gather over ``w`` live blocks) next
+to the contiguous in-cache decode's words (full ``max_len`` stream) and the
+Lq = 1 specialization of Thm 2.1 (``core.bounds.attention_bound``), whose
+memory-independent KV-stream term dominates decode. A pool-occupancy row
+charges a shared prompt prefix once (refcounted blocks) vs per-request.
+
+**Throughput (informational + floor-gated).** The same mixed workload served
+by the wave baseline, the slot-pool engine (``paged=False``), and the paged
+engine; tok/s fields deliberately avoid the ``_words``/``_ratio`` suffixes
+so ``compare.py`` never gates wall-clock noise, but ``main`` enforces a
+paged >= 0.75x slot-pool floor.
+
+CLI (the CI serving gate):
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --json BENCH_serving.json
+
+exits nonzero if paged decode moves >= the contiguous words on any snapshot,
+the measured/bound ratio drifts, prefix sharing stops saving pool words, or
+paged tok/s falls below the slot-pool floor.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import sys
 import time
 from typing import List
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-# Two prompt-length buckets keep the prefill jit count at 2 while still
-# exercising mixed depths; the output budgets are strongly heterogeneous so
-# wave lockstep wastes steps on drained rows.
-PROMPT_LENS = (4, 12)
-MAX_NEWS = (4, 24)
-N_REQUESTS = 12
-BATCH = 4
-MAX_LEN = 64
+from repro import ops
+from repro.plan import TPU_V5E
+from repro.serving import kv
 
+PALLAS = ops.ExecutionContext(target=TPU_V5E, backend="pallas")
+
+# Two prompt-length buckets keep the prefill jit count small while still
+# exercising mixed depths; heterogeneous output budgets make wave lockstep
+# waste steps on drained rows; four requests share a full-block prefix so
+# the paged engine exercises refcounted sharing in the timed run.
+PROMPT_LENS = (4, 12)
+MAX_NEWS = (8, 56)
+N_REQUESTS = 12
+N_SHARED = 4
+SHARED_PREFIX = 16
+BATCH = 4
+# The serving window: paged decode reads w live blocks per step while the
+# contiguous engine streams the whole max_len window, so the paged win grows
+# with max_len - live_tokens. 512 is past the CPU-smoke crossover (~256)
+# where block-gather graph overhead is repaid by the smaller KV stream.
+MAX_LEN = 512
+BLOCK = kv.DEFAULT_BLOCK_SIZE
+
+
+# ---------------------------------------------------------------------------
+# Shape sweep: measured decode words vs the attention bound
+# ---------------------------------------------------------------------------
+
+# (name, batch, live tokens per row) decode snapshots under MAX_LEN:
+# early decode (1 live block), the bench workload's depth, a deep sequence.
+SNAPSHOTS = (
+    ("decode/B4_len12", 4, 12),
+    ("decode/B4_len50", 4, 50),
+    ("decode/B4_len200", 4, 200),
+)
+
+
+def _smoke_cfg():
+    from repro.configs import get_smoke
+    return dataclasses.replace(get_smoke("qwen2_5_3b"),
+                               compute_dtype="float32")
+
+
+def sweep(dtype=jnp.bfloat16):
+    cfg = _smoke_cfg()
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    num_blocks = kv.plan_pool_blocks(cfg, MAX_LEN, BATCH, BLOCK)
+    records = []
+    for name, B, live in SNAPSHOTS:
+        w = -(-live // BLOCK)
+        q = jax.ShapeDtypeStruct((B, H, 1, hd), dtype)
+        paged = ops.explain(
+            "attention_decode", PALLAS,
+            spec_args=(q,
+                       jax.ShapeDtypeStruct((num_blocks, KV, BLOCK, hd), dtype),
+                       jax.ShapeDtypeStruct((num_blocks, KV, BLOCK, hd), dtype),
+                       jax.ShapeDtypeStruct((B, w), jnp.int32),
+                       jax.ShapeDtypeStruct((B,), jnp.int32)))
+        # the contiguous engine streams the whole max_len cache window each
+        # step (per-row offsets, pallas-native since this PR)
+        contig = ops.explain(
+            "attention", PALLAS,
+            needs=ops.attention_needs(q_offset=jnp.arange(B)),
+            spec_args=(q,
+                       jax.ShapeDtypeStruct((B, KV, MAX_LEN, hd), dtype),
+                       jax.ShapeDtypeStruct((B, KV, MAX_LEN, hd), dtype)),
+            spec_kw={"q_offset": jnp.full((B,), live, jnp.int32)})
+        assert paged.chosen == "pallas" and not paged.fell_back
+        assert contig.chosen == "pallas" and not contig.fell_back
+        records.append({
+            "name": name,
+            "live_tokens": live,
+            "table_width": w,
+            "paged_words": paged.measured_words,
+            "contig_words": contig.measured_words,
+            "lower_bound": paged.plan.lower_bound,
+            "paged_bound_ratio": paged.bound_ratio,
+            "paged_over_contig_ratio":
+                paged.measured_words / contig.measured_words,
+        })
+    # pool occupancy: N_SHARED requests sharing a SHARED_PREFIX-token system
+    # prompt; refcounted blocks charge the prefix once
+    bw = kv.block_words(cfg, BLOCK)
+    alloc = kv.BlockAllocator(num_blocks)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, size=SHARED_PREFIX)
+    naive_blocks = 0
+    for i in range(N_SHARED):
+        toks = list(shared) + list(rng.integers(1, cfg.vocab_size, size=4 + i))
+        need = -(-len(toks) // BLOCK)
+        naive_blocks += need
+        blocks = []
+        for key in kv.prefix_chain(toks, BLOCK):
+            hit = alloc.lookup(key)
+            if hit is not None:
+                blocks.append(alloc.ref(hit))
+                continue
+            b = alloc.alloc()
+            alloc.register(b, key)
+            blocks.append(b)
+        while len(blocks) < need:
+            blocks.append(alloc.alloc())
+    records.append({
+        "name": "pool/shared_prefix",
+        "requests": N_SHARED,
+        "prefix_tokens": SHARED_PREFIX,
+        "shared_pool_words": alloc.used_words(bw),
+        "naive_pool_words": naive_blocks * bw,
+        "shared_over_naive_ratio":
+            alloc.used_words(bw) / (naive_blocks * bw),
+    })
+    return records
+
+
+# ---------------------------------------------------------------------------
+# Throughput: wave vs slot-pool vs paged on one mixed workload
+# ---------------------------------------------------------------------------
 
 def _workload(cfg, seed: int = 0) -> List:
     from repro.serving.engine import Request
@@ -45,11 +170,18 @@ def _workload(cfg, seed: int = 0) -> List:
                                 dtype=np.int64).astype(np.int32),
             max_new_tokens=MAX_NEWS[i % len(MAX_NEWS)],
             temperature=0.0))
+    shared = rng.integers(0, cfg.vocab_size, size=SHARED_PREFIX,
+                          dtype=np.int64).astype(np.int32)
+    for i in range(N_SHARED):
+        tail = rng.integers(0, cfg.vocab_size, size=2 + i,
+                            dtype=np.int64).astype(np.int32)
+        reqs.append(Request(prompt=np.concatenate([shared, tail]),
+                            max_new_tokens=8, temperature=0.0))
     return reqs
 
 
-def _run(engine_cls, cfg, params, seed: int):
-    eng = engine_cls(cfg, params, max_len=MAX_LEN, batch_size=BATCH)
+def _run(mk_engine, cfg, params, seed: int):
+    eng = mk_engine(cfg, params)
     reqs = _workload(cfg, seed=seed)
     t0 = time.perf_counter()
     eng.serve(reqs)
@@ -58,25 +190,104 @@ def _run(engine_cls, cfg, params, seed: int):
     return toks, dt
 
 
-def run(csv_rows: list) -> None:
-    from repro.configs import get_smoke
+def throughput():
     from repro.models import transformer as T
     from repro.serving.engine import Engine, WaveEngine
 
-    cfg = dataclasses.replace(get_smoke("qwen2_5_3b"),
-                              compute_dtype="float32")
+    cfg = _smoke_cfg()
     params = T.init_params(jax.random.PRNGKey(0), cfg)
+    mks = {
+        "wave": lambda c, p: WaveEngine(c, p, max_len=MAX_LEN,
+                                        batch_size=BATCH, paged=False),
+        "slotpool": lambda c, p: Engine(c, p, max_len=MAX_LEN,
+                                        batch_size=BATCH, paged=False),
+        "paged": lambda c, p: Engine(c, p, max_len=MAX_LEN,
+                                     batch_size=BATCH, paged=True),
+    }
+    out = {}
+    for name, mk in mks.items():
+        _run(mk, cfg, params, seed=1)  # warmup: jit ladder incl. table widths
+        # best-of-3: the engines run identical tokens every repeat, so min
+        # wall clock is the scheduling cost with the least OS noise
+        toks, dt = min((_run(mk, cfg, params, seed=0) for _ in range(3)),
+                       key=lambda td: td[1])
+        out[name] = (toks, dt, toks / dt)
+    return out
 
-    # warmup: populate the shared jit caches (both prompt buckets + decode)
-    for cls in (WaveEngine, Engine):
-        _run(cls, cfg, params, seed=1)
 
-    toks_w, dt_w = _run(WaveEngine, cfg, params, seed=0)
-    toks_c, dt_c = _run(Engine, cfg, params, seed=0)
-    tps_w, tps_c = toks_w / dt_w, toks_c / dt_c
-    csv_rows.append(("serving/wave", f"{dt_w * 1e6:.0f}",
-                     f"tok_s={tps_w:.1f} tokens={toks_w}"))
-    csv_rows.append(("serving/continuous", f"{dt_c * 1e6:.0f}",
-                     f"tok_s={tps_c:.1f} tokens={toks_c}"))
+def run(csv_rows: list) -> None:
+    for r in sweep():
+        if r["name"].startswith("decode/"):
+            csv_rows.append((
+                f"serving/words/{r['name']}", "0",
+                f"paged={r['paged_words']:.3e}w "
+                f"({r['paged_bound_ratio']:.2f}x bound) "
+                f"contig={r['contig_words']:.3e}w "
+                f"paged/contig={r['paged_over_contig_ratio']:.2f}x"))
+        else:
+            csv_rows.append((
+                f"serving/{r['name']}", "0",
+                f"shared={r['shared_pool_words']:.3e}w "
+                f"naive={r['naive_pool_words']:.3e}w "
+                f"({r['shared_over_naive_ratio']:.2f}x)"))
+    tp = throughput()
+    for name, (toks, dt, tps) in tp.items():
+        csv_rows.append((f"serving/{name}", f"{dt * 1e6:.0f}",
+                         f"tok_s={tps:.1f} tokens={toks}"))
     csv_rows.append(("serving/speedup", "0",
-                     f"continuous_over_wave={tps_c / tps_w:.2f}x"))
+                     f"paged_over_slotpool={tp['paged'][2] / tp['slotpool'][2]:.2f}x "
+                     f"continuous_over_wave={tp['slotpool'][2] / tp['wave'][2]:.2f}x"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_serving.json", metavar="PATH",
+                    help="write sweep + throughput records to PATH")
+    ap.add_argument("--skip-throughput", action="store_true",
+                    help="shape sweep only (no model execution)")
+    args = ap.parse_args(argv)
+    records = sweep()
+    bad = []
+    for r in records:
+        if r["name"].startswith("decode/"):
+            print(f"{r['name']:18s} paged={r['paged_words']:.3e}w "
+                  f"({r['paged_bound_ratio']:.2f}x bound) "
+                  f"contig={r['contig_words']:.3e}w "
+                  f"gap={r['paged_over_contig_ratio']:.2f}x")
+            if r["paged_words"] >= r["contig_words"]:
+                bad.append(f"{r['name']}: paged moves >= contiguous words")
+            if r["paged_bound_ratio"] > 1.2:
+                bad.append(f"{r['name']}: measured decode words "
+                           f"{r['paged_bound_ratio']:.2f}x off the "
+                           f"attention bound")
+        else:
+            print(f"{r['name']:18s} shared={r['shared_pool_words']:.3e}w "
+                  f"naive={r['naive_pool_words']:.3e}w")
+            if r["shared_pool_words"] >= r["naive_pool_words"]:
+                bad.append(f"{r['name']}: prefix sharing saves no pool words")
+    if not args.skip_throughput:
+        tp = throughput()
+        rec = {"name": "throughput/mixed"}
+        for name, (toks, dt, tps) in tp.items():
+            print(f"throughput/{name:9s} tok_s={tps:.1f} tokens={toks}")
+            rec[f"tok_s_{name}"] = tps
+            rec[f"tokens_{name}"] = toks
+        rec["paged_speedup"] = tp["paged"][2] / tp["slotpool"][2]
+        records.append(rec)
+        # a floor, not a compare.py metric: wall clock is noisy on shared CI
+        if tp["paged"][2] < 0.75 * tp["slotpool"][2]:
+            bad.append(f"throughput: paged tok/s {tp['paged'][2]:.1f} below "
+                       f"0.75x slot-pool {tp['slotpool'][2]:.1f}")
+    with open(args.json, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"wrote {len(records)} records to {args.json}")
+    if bad:
+        print("FAIL:", file=sys.stderr)
+        for b in bad:
+            print(f"  {b}", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

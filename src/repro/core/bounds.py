@@ -117,6 +117,37 @@ def combined_parallel_bound(shape: ConvShape, P: int, M: float) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Attention specialization (Thm 2.1 applied to the two attention GEMMs).
+# ---------------------------------------------------------------------------
+
+def attention_bound(B: int, H: int, KV: int, Lq: int, Lk: int, hd: int,
+                    M: float, prec: Precision = Precision()) -> BoundTerms:
+    """Single-processor bound for GQA attention in words.
+
+    Attention is two chained 7NL degenerates — S = QK^T and O = PV — with
+    G = 2 B H Lq Lk hd total MACs. A flash-style schedule keeps S/P resident
+    in fast memory (never spilled), so the memory-independent term charges
+    only the four HBM-resident arrays: Q and O at ``p_I``/``p_O`` words per
+    element and the un-repeated K/V streams (|K| = |V| = B KV Lk hd, GQA
+    keeps them factored) at ``p_F``. The per-M and small-filter terms are the
+    w_F = h_F = s = 1 specializations of Thm 2.1, exactly as
+    ``matmul_bound``; for decode (Lq = 1) the memory-independent term — the
+    pure KV-cache stream — dominates, which is the paper's thesis applied to
+    serving."""
+    G = 2.0 * B * H * Lq * Lk * hd
+    memfree = (prec.p_I * B * H * Lq * hd
+               + prec.p_F * 2.0 * B * KV * Lk * hd
+               + prec.p_O * B * H * Lq * hd)
+    per_M = C_p(prec) * G / M - M
+    small_filter = (2.0 * math.sqrt(prec.p_I * prec.p_F * prec.p_O) * G
+                    / math.sqrt(M) - 2.0 * M)
+    return BoundTerms(
+        {"memory_independent": memfree, "per_M": per_M,
+         "small_filter": small_filter}
+    )
+
+
+# ---------------------------------------------------------------------------
 # Matmul specialization (sanity anchor: classical results).
 # ---------------------------------------------------------------------------
 

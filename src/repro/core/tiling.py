@@ -427,6 +427,26 @@ def blocking_efficiency(shape: ConvShape, mem: MemoryModel) -> Tuple[float, floa
 
 
 # ---------------------------------------------------------------------------
+# Attention block sizing: the capacity argument of the flash kernel.
+# ---------------------------------------------------------------------------
+
+def attention_block_size(dh: int, m_eff: float, p_kv: float = 1.0) -> int:
+    """The (block_q = block_k) tile of the blocked flash-attention schedule:
+    f32 q/acc/stats residents plus streamed k/v tiles (``p_kv`` words per
+    element) must fit the double-buffered budget ``m_eff``. The LP
+    degenerates to this closed form because both attention GEMMs share the
+    b_q x b_k footprint term; returns the largest MXU-saturating power of
+    two <= 512 that fits."""
+    for b in (512, 256, 128, 64, 32, 16, 8):
+        words = 2.0 * b * dh + 2.0 * b * dh * p_kv + b * b + 2.0 * b
+        if words <= m_eff:
+            return b
+    raise ValueError(
+        f"no attention block fits: dh={dh} needs more than "
+        f"M_eff={m_eff:.0f} words even at block 8")
+
+
+# ---------------------------------------------------------------------------
 # Matmul convenience: LP-tiled GEMM block shapes for the Pallas kernels.
 # ---------------------------------------------------------------------------
 

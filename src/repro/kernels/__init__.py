@@ -9,12 +9,19 @@ oracles in ref.py with interpret=True on CPU.
 Consumers should not call these modules directly: the ``repro.ops`` dispatch
 subsystem (ExecutionContext -> Backend -> kernel) routes each call to the
 right backend with capability fallback and attaches measured HBM-word
-counters (``conv2d_hbm_words``, ``matmul_hbm_words``, ``im2col_hbm_words``)
-to every instrumented dispatch."""
+counters (``conv2d_hbm_words``, ``matmul_hbm_words``, ``im2col_hbm_words``,
+``attention_hbm_words``, ``paged_decode_hbm_words``) to every instrumented
+dispatch."""
 
 from . import ref  # noqa: F401
 from .conv1d import conv1d_causal  # noqa: F401
 from .conv2d import conv2d, conv2d_hbm_words  # noqa: F401
-from .flash_attention import attention_blocks, flash_attention  # noqa: F401
+from .flash_attention import (  # noqa: F401
+    attention_blocks,
+    attention_hbm_words,
+    flash_attention,
+    paged_decode_attention,
+    paged_decode_hbm_words,
+)
 from .im2col import conv2d_im2col, im2col_hbm_words  # noqa: F401
 from .matmul import matmul, matmul_hbm_words  # noqa: F401

@@ -22,6 +22,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.conv_model import round_up
+from repro.core.tiling import attention_block_size
 from repro.plan import HardwareTarget
 
 DEFAULT_BLOCK_Q = 512
@@ -33,19 +34,15 @@ def attention_blocks(dh: int, target: HardwareTarget,
                      kv_word: Optional[float] = None) -> tuple[int, int]:
     """(block_q, block_k) from the target's capacity argument (module
     docstring): f32 q/acc/stats residents + streamed k/v tiles must fit the
-    double-buffered budget. Largest MXU-saturating power of two <= 512 that
-    fits; the LP degenerates to this closed form because both attention GEMMs
-    share the b_q x b_k footprint term. ``kv_word`` is the stream width of the
-    actual k/v arrays (words of 32 bits); defaults to the target's policy."""
+    double-buffered budget. Delegates to ``core.tiling.attention_block_size``
+    — the same closed form the planner's attention plans use — so kernel
+    launch geometry and planned tiles can never drift apart. ``kv_word`` is
+    the stream width of the actual k/v arrays (words of 32 bits); defaults to
+    the target's policy."""
     m_eff = target.memory_model().M_eff
     p_kv = target.precision.p_I if kv_word is None else kv_word
-    for b in (512, 256, 128, 64, 32, 16, 8):
-        words = 2.0 * b * dh + 2.0 * b * dh * p_kv + b * b + 2.0 * b
-        if words <= m_eff:
-            return b, b
-    raise ValueError(
-        f"no attention block fits {target.name}: dh={dh} needs more than "
-        f"M_eff={m_eff:.0f} words even at block 8")
+    b = attention_block_size(dh, m_eff, p_kv=p_kv)
+    return b, b
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -96,22 +93,80 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _flash_kernel_dyn(offs_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *,
+                      scale: float, causal: bool, block_q: int, block_k: int,
+                      n_k: int, q_seq_len: Optional[int]):
+    """The dynamic twin of ``_flash_kernel``: per-row q_offset and kv_len
+    arrive as scalar-prefetch refs (one int32 per BH row) instead of static
+    ints, so one trace serves every (offset, length) combination — the decode
+    hot path retraces on shape only, never on position."""
+    b = pl.program_id(0)
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)  # (bk, dh)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # the length mask is unconditional: it covers both block padding and
+    # per-row cache lengths shorter than the padded key axis
+    s = jnp.where(kpos < lens_ref[b], s, NEG_INF)
+    if causal:
+        qidx = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        if q_seq_len is not None:
+            qidx = qidx % q_seq_len  # GQA fold: positions wrap per group
+        s = jnp.where(kpos <= qidx + offs_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _store():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
 def flash_attention(
     q: jax.Array,  # (BH, Lq, Dh)  - batch*heads flattened by the wrapper
     k: jax.Array,  # (BH, Lk, Dh)
     v: jax.Array,  # (BH, Lk, Dh)
     causal: bool = True,
-    q_offset: int = 0,
+    q_offset=0,  # int, or int32 array: scalar or per-row (BH,)
     block_q: Optional[int] = None,
     block_k: Optional[int] = None,
     target: Optional[HardwareTarget] = None,
     interpret: Optional[bool] = None,
     q_seq_len: Optional[int] = None,
+    kv_lens: Optional[jax.Array] = None,  # int32 (BH,): valid keys per row
 ) -> jax.Array:
     """``q_seq_len``: set when the query axis folds GQA groups — q rows are g
     groups of ``q_seq_len`` queries stacked, each group restarting at absolute
     position ``q_offset`` (the repeat-free GQA path; K/V stay un-repeated at
-    (B*Hkv, Lk, Dh)). None = plain contiguous positions."""
+    (B*Hkv, Lk, Dh)). None = plain contiguous positions.
+
+    A traced/array ``q_offset`` or a ``kv_lens`` array selects the dynamic
+    kernel: offsets and cache lengths ride as scalar-prefetch operands, so the
+    serving engine's lockstep decode (every row at a different position)
+    compiles once per shape instead of once per step."""
     BH, Lq, Dh = q.shape
     Lk = k.shape[1]
     if block_q is None or block_k is None:
@@ -138,6 +193,42 @@ def flash_attention(
 
     if q_seq_len is not None and q_seq_len >= Lq:
         q_seq_len = None  # a single group degenerates to plain positions
+
+    scratch = [
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, Dh), jnp.float32),
+    ]
+    dynamic = kv_lens is not None or not isinstance(q_offset, int)
+    if dynamic:
+        offs = jnp.broadcast_to(
+            jnp.asarray(q_offset, jnp.int32).reshape(-1), (BH,))
+        lens = (jnp.full((BH,), Lk, jnp.int32) if kv_lens is None
+                else jnp.broadcast_to(
+                    jnp.asarray(kv_lens, jnp.int32).reshape(-1), (BH,)))
+        kernel = functools.partial(
+            _flash_kernel_dyn, scale=scale, causal=causal,
+            block_q=bq, block_k=bk, n_k=n_k, q_seq_len=q_seq_len,
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(BH, n_q, n_k),
+                in_specs=[
+                    pl.BlockSpec((1, bq, Dh), lambda b, i, j, o, s: (b, i, 0)),
+                    pl.BlockSpec((1, bk, Dh), lambda b, i, j, o, s: (b, j, 0)),
+                    pl.BlockSpec((1, bk, Dh), lambda b, i, j, o, s: (b, j, 0)),
+                ],
+                out_specs=pl.BlockSpec(
+                    (1, bq, Dh), lambda b, i, j, o, s: (b, i, 0)),
+                scratch_shapes=scratch,
+            ),
+            out_shape=jax.ShapeDtypeStruct((BH, Lqp, Dh), q.dtype),
+            interpret=interpret,
+        )(offs, lens, q, k, v)
+        return out[:, :Lq]
+
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal,
         block_q=bq, block_k=bk, n_k=n_k, q_offset=q_offset, kv_len=Lk,
@@ -153,11 +244,142 @@ def flash_attention(
         ],
         out_specs=pl.BlockSpec((1, bq, Dh), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Lqp, Dh), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, Dh), jnp.float32),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(q, k, v)
     return out[:, :Lq]
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: block-table-gathering attention over the serving KV pool.
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         scale: float, block_size: int, n_blk: int):
+    """One (batch row, kv head) pair streams its block-table chain: grid step
+    j fetches physical block ``tables[b, j]`` straight from the pool via the
+    index_map (no gather materialized in HBM), masks positions past the row's
+    cache length, and folds into the online softmax. Dead/padded table slots
+    point at reserved block 0, whose garbage keys are masked by the length."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (g, hd): this kv head's q group
+    k = k_ref[0, 0].astype(jnp.float32)  # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bs, hd)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (g, bs)
+    kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < lens_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == n_blk - 1)
+    def _store():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # rows with length 0 -> zeros
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,        # (B, H, 1, hd) - one new query per sequence
+    kp: jax.Array,       # (num_blocks, KV, block_size, hd) - the key pool
+    vp: jax.Array,       # (num_blocks, KV, block_size, hd) - the value pool
+    tables: jax.Array,   # (B, w) int32 - physical block ids per sequence
+    lengths: jax.Array,  # (B,) int32 - valid cache length per sequence
+    target: Optional[HardwareTarget] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Decode attention that reads K/V directly out of the paged pool.
+
+    The communication-optimal property the paper's decode bound asks for:
+    each sequence moves exactly its own ``w * block_size`` cached keys/values
+    once — no repeat-materialized GQA heads, no gather copy of the table into
+    a contiguous buffer first. Query heads are grouped per kv head
+    (h = kv * g + i, matching the registry's GQA fold), so the q block a grid
+    row loads is the (g, hd) group that shares its kv head."""
+    B, H, Lq, hd = q.shape
+    if Lq != 1:
+        raise ValueError(f"paged decode takes one query per row, got Lq={Lq}")
+    KV, block_size = kp.shape[1], kp.shape[2]
+    w = tables.shape[1]
+    g = H // KV
+    if interpret is None:
+        interpret = target.interpret if target is not None else True
+    scale = 1.0 / (hd ** 0.5)
+    qf = q.reshape(B, KV, g, hd)
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, block_size=block_size, n_blk=w)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, w),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda b, h, j, t, l: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_size, hd),
+                             lambda b, h, j, t, l: (t[b, j], h, 0, 0)),
+                pl.BlockSpec((1, 1, block_size, hd),
+                             lambda b, h, j, t, l: (t[b, j], h, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, g, hd), lambda b, h, j, t, l: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), qf, kp, vp)
+    return out.reshape(B, H, 1, hd)
+
+
+# ---------------------------------------------------------------------------
+# Measured HBM traffic, in 32-bit words, from launch geometry (shape-only).
+# ---------------------------------------------------------------------------
+
+def attention_hbm_words(BH: int, Lq: int, Lk: int, dh: int,
+                        block_q: int, block_k: int,
+                        p_q: float = 1.0, p_kv: float = 1.0,
+                        p_o: float = 1.0) -> float:
+    """Words the flash launch moves: q tiles once, k/v streamed once per q
+    tile, o stored once — the same accounting ``plan(AttentionSpec)`` models,
+    evaluated at the kernel's actual clamped/padded blocks."""
+    bq = min(block_q, round_up(Lq, 8))
+    bk = min(block_k, round_up(Lk, 8))
+    lqp, lkp = round_up(Lq, bq), round_up(Lk, bk)
+    n_q = lqp // bq
+    return (p_q * BH * lqp * dh
+            + 2.0 * p_kv * BH * n_q * lkp * dh
+            + p_o * BH * lqp * dh)
+
+
+def paged_decode_hbm_words(B: int, KV: int, g: int, w: int, block_size: int,
+                           hd: int, p_q: float = 1.0, p_kv: float = 1.0,
+                           p_o: float = 1.0) -> float:
+    """Words one paged decode step moves: each (row, kv head) loads its
+    (g, hd) query group, streams w blocks of k and v once, stores the group —
+    plus the int32 block tables and lengths (1 word each)."""
+    return (p_q * B * KV * g * hd
+            + 2.0 * p_kv * B * KV * w * block_size * hd
+            + p_o * B * KV * g * hd
+            + B * w + B)

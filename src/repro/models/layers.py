@@ -112,9 +112,16 @@ def attention_block(
     cache_index: Optional[jax.Array] = None,  # scalar or (B,): write offset(s)
     ctx: Optional[ExecutionContext] = None,
     attn_mask: Optional[jax.Array] = None,  # (B, L) True = real token
+    block_tables: Optional[jax.Array] = None,  # (B, w): paged-pool tables
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """Returns (out, updated_cache). With a cache, keys/values are written at
     cache_index and attention runs over the full cache (decode/prefill).
+
+    ``block_tables`` switches the cache to the paged layout: ``cache`` is the
+    shared ``(num_blocks, KV, block_size, hd)`` k/v pool, row i's keys live in
+    blocks ``block_tables[i]``, and the step is decode-only (L == 1). The new
+    K/V land in physical block ``tables[i, pos // bs]`` at offset ``pos % bs``;
+    dead rows (tables all zero) write reserved garbage block 0.
 
     A scalar ``cache_index`` writes all rows at one offset (lockstep prefill /
     wave decode); a ``(B,)`` vector writes row i at ``cache_index[i]`` and
@@ -147,6 +154,22 @@ def attention_block(
 
     idx = None if cache_index is None else jnp.asarray(cache_index, jnp.int32)
     new_cache = None
+    if block_tables is not None:
+        if L != 1:
+            raise ValueError(f"paged attention is decode-only (L == 1), got L={L}")
+        kp, vp = cache
+        bs = kp.shape[2]
+        pos = jnp.broadcast_to(idx, (B,))  # per-row depth = write position
+        blk = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
+                                  axis=1)[:, 0]  # (B,) physical block
+        off = pos % bs
+        kp = kp.at[blk, :, off].set(k[:, :, 0, :].astype(kp.dtype))
+        vp = vp.at[blk, :, off].set(v[:, :, 0, :].astype(vp.dtype))
+        o = ops.attention_decode(q.astype(cd), kp, vp, block_tables, pos + 1,
+                                 ctx=ctx)
+        o = o.transpose(0, 2, 1, 3).reshape(B, L, H * hd)
+        out = jnp.einsum("blh,hd->bld", o, p["wo"].astype(cd)).astype(x.dtype)
+        return out, (kp, vp)
     if cache is not None and len(cache) == 1:
         # fused layout: one (B, KV, L, 2, hd) tensor -> a single
         # dynamic-update-slice per step instead of two (§Perf decode variant)

@@ -118,6 +118,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         lambda a: jnp.broadcast_to(a[None], (cfg.repeats,) + a.shape), one)
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> PyTree:
+    """Stacked paged KV pool: every attention layer gets a
+    ``(num_blocks, KV, block_size, hd)`` key pool and value pool (stacked to
+    (repeats, ...) like ``init_cache``). Physical block 0 is the reserved
+    garbage block (``serving.kv.GARBAGE_BLOCK``): dead batch rows point their
+    tables at it. Attention-only patterns — recurrent blocks carry O(1)
+    state and gain nothing from paging."""
+    if set(cfg.pattern) != {"attn"}:
+        raise ValueError(
+            f"paged cache requires a pure-attention pattern, got {cfg.pattern}")
+    shape = (num_blocks, cfg.n_kv_heads, block_size, cfg.hd)
+    one = {f"b{i}": {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+           for i in range(len(cfg.pattern))}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.repeats,) + a.shape), one)
+
+
 def insert_cache_slot(cache: PyTree, row: PyTree, slot) -> PyTree:
     """Write a single-sequence cache (batch size 1) into batch slot ``slot``
     of a pooled cache. Every leaf is stacked (repeats, B, ...), so the batch
@@ -139,12 +157,19 @@ def reset_cache_slot(cache: PyTree, slot) -> PyTree:
 
 
 def cache_footprint_words(cfg: ModelConfig, max_len: int,
-                          dtype=jnp.bfloat16) -> float:
+                          dtype=jnp.bfloat16,
+                          block_size: Optional[int] = None) -> float:
     """Per-sequence decode-cache size in 32-bit words (the paper's unit).
 
     Computed from ``init_cache`` via eval_shape (no allocation); the serving
     engine divides a HardwareTarget's HBM budget by this to size its slot
-    pool."""
+    pool. ``block_size`` switches to block-granular accounting: a paged
+    sequence occupies whole blocks, so its footprint is ``max_len`` rounded
+    up to the block size (the engine's admission math must match actual pool
+    occupancy — a shared prefix is then charged once via
+    ``BlockAllocator.used_words``, not here)."""
+    if block_size is not None:
+        max_len = -(-max_len // block_size) * block_size
     shapes = jax.eval_shape(lambda: init_cache(cfg, 1, max_len, dtype))
     return sum(leaf.size * leaf.dtype.itemsize
                for leaf in jax.tree.leaves(shapes)) / 4.0
@@ -156,7 +181,7 @@ def cache_footprint_words(cfg: ModelConfig, max_len: int,
 
 def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
                   cache_index, n_groups: int, ctx: Optional[ExecutionContext],
-                  decode: bool, attn_mask=None):
+                  decode: bool, attn_mask=None, block_tables=None):
     """One pattern unit; returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, PyTree] = {}
@@ -165,18 +190,26 @@ def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
         h = rms_norm(x, blk["norm1"], cfg.norm_eps)
         bc = unit_cache.get(f"b{i}") if unit_cache is not None else None
         if kind == "attn":
+            paged = bc is not None and "kp" in bc
             if bc is None:
                 cache = None
+            elif paged:
+                cache = (bc["kp"], bc["vp"])
             elif cfg.fused_kv_cache:
                 cache = (bc["kv"],)
             else:
                 cache = (bc["k"], bc["v"])
             out, upd = attention_block(blk["core"], h, cfg, positions,
                                        cache=cache, cache_index=cache_index,
-                                       ctx=ctx, attn_mask=attn_mask)
+                                       ctx=ctx, attn_mask=attn_mask,
+                                       block_tables=(block_tables if paged
+                                                     else None))
             if upd is not None:
-                new_cache[f"b{i}"] = ({"kv": upd[0]} if cfg.fused_kv_cache
-                                      else {"k": upd[0], "v": upd[1]})
+                if paged:
+                    new_cache[f"b{i}"] = {"kp": upd[0], "vp": upd[1]}
+                else:
+                    new_cache[f"b{i}"] = ({"kv": upd[0]} if cfg.fused_kv_cache
+                                          else {"k": upd[0], "v": upd[1]})
         elif kind == "mamba":
             state = (bc["h"], bc["tail"]) if bc is not None else None
             if decode:
@@ -234,8 +267,13 @@ def hidden_forward(
     act_spec=None,  # PartitionSpec for (B, L, D) activations (seq parallel)
     attn_mask: Optional[jax.Array] = None,  # (B, L) True = real token
     positions: Optional[jax.Array] = None,  # (L,) or (B, L) RoPE positions
+    block_tables: Optional[jax.Array] = None,  # (B, w) paged-cache tables
 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     """Backbone only: returns (final-norm hidden states, new_cache, aux).
+
+    A ``block_tables`` array marks ``cache`` as a paged pool
+    (``init_paged_cache`` layout): decode-only, one query per row, keys
+    gathered through the table by the paged attention kernel.
 
     ``ctx`` is the execution policy (``repro.ops.ExecutionContext``): which
     backend serves each kernel call, planned against which HardwareTarget,
@@ -274,7 +312,8 @@ def hidden_forward(
     x = constrain(x)
     body_fn = functools.partial(
         _unit_forward, cfg=cfg, positions=positions, cache_index=cache_index,
-        n_groups=n_groups, ctx=ctx, decode=decode, attn_mask=attn_mask)
+        n_groups=n_groups, ctx=ctx, decode=decode, attn_mask=attn_mask,
+        block_tables=block_tables)
 
     def scan_body(carry, xs):
         x, aux = carry
@@ -309,13 +348,14 @@ def forward(
     act_spec=None,
     attn_mask: Optional[jax.Array] = None,
     positions: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     """Returns (logits, new_cache, aux_loss)."""
     x, new_cache, aux = hidden_forward(
         params, cfg, tokens=tokens, embeds=embeds, cache=cache,
         cache_index=cache_index, n_groups=n_groups, ctx=ctx,
         remat=remat, decode=decode, act_spec=act_spec, attn_mask=attn_mask,
-        positions=positions)
+        positions=positions, block_tables=block_tables)
     logits = lm_logits(params["head"], x, jnp.dtype(cfg.compute_dtype))
     return logits, new_cache, aux
 

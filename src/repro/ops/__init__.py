@@ -13,9 +13,11 @@ therefore the optimal execution strategy.
 
     ctx = ExecutionContext(target=TPU_V5E)           # -> pallas by default
     y = ops.attention(q, k, v, ctx=ctx)              # flash kernel, LP blocks
-    y = ops.attention(q, k, v, q_offset=idx, ctx=ctx)  # falls back to masked
-                                                       # XLA *by capability*
+    y = ops.attention(q, k, v, q_offset=idx, ctx=ctx)  # still pallas: traced
+                                                       # offsets scalar-prefetch
+    y = ops.attention_decode(q, kp, vp, tables, lens, ctx=ctx)  # paged decode
     ops.explain("attention", ctx, needs=("key_mask",)).chosen  # -> "xla"
+                                                     # (fallback *by capability*)
 
 Backends are registered in ``repro.ops.registry`` (``xla``, ``pallas``, and
 the ``im2col`` conv baseline); each op entry declares capabilities (accepted
@@ -49,6 +51,7 @@ from .context import (  # noqa: F401
 from .dispatch import (  # noqa: F401
     DispatchDecision,
     attention,
+    attention_decode,
     attention_needs,
     conv1d_causal,
     conv2d,
@@ -67,4 +70,5 @@ from .registry import (  # noqa: F401
     register_backend,
     registered_ops,
     xla_attention,
+    xla_attention_decode,
 )

@@ -263,10 +263,28 @@ def attention(q, k, v, causal: bool = True, q_offset=0, key_mask=None,
     (train/prefill), a traced scalar (lockstep decode), or a (B,) vector
     (continuous-batching decode, every slot at its own depth). ``key_mask``
     is an optional (B, Lk) validity mask over the keys (padded prefill).
-    Backends that cannot serve the traced/masked variants (the Pallas flash
-    kernel) fall back by declared capability."""
+    Backends that cannot serve the masked variant (the Pallas flash kernel)
+    fall back by declared capability; traced and per-row offsets ride the
+    flash kernel's scalar-prefetch path."""
     ctx = default_context() if ctx is None else ctx
     entry, dec = resolve("attention", ctx, dtype=str(q.dtype),
-                         needs=attention_needs(q_offset, key_mask))
+                         needs=attention_needs(q_offset, key_mask),
+                         spec_args=(q, k, v))
     return entry.fn(ctx, dec.plan, q, k, v, causal=causal,
                     q_offset=q_offset, key_mask=key_mask)
+
+
+def attention_decode(q, kp, vp, tables, lengths,
+                     ctx: Optional[ExecutionContext] = None):
+    """One paged decode step: ``q`` is (B, H, 1, hd), ``kp``/``vp`` the
+    shared (num_blocks, KV, block_size, hd) pools, ``tables`` the (B, w)
+    int32 physical-block ids backing each row's logical positions, and
+    ``lengths`` the (B,) valid cache lengths (current token included).
+
+    The pallas entry follows the tables inside the kernel's index_map (no
+    gather copy); the xla entry gathers to a contiguous view first — the
+    measured-words gap between them is the point of the paged subsystem."""
+    ctx = default_context() if ctx is None else ctx
+    entry, dec = resolve("attention_decode", ctx, dtype=str(q.dtype),
+                         spec_args=(q, kp, vp, tables, lengths))
+    return entry.fn(ctx, dec.plan, q, kp, vp, tables, lengths)

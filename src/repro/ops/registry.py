@@ -13,12 +13,15 @@ Three backends ship:
   * ``xla``    - pure jnp/lax reference path. Universal: every capability
                  flag, every dtype; the terminal fallback.
   * ``pallas`` - the LP-tiled Pallas kernels. Declares exactly what the
-                 kernels support: static scalar ``q_offset``, no key masks
-                 (the in-cache decode path therefore falls back to masked
-                 XLA *by declared capability*). Attention serves GQA by
-                 folding query groups into the sequence axis — K/V are never
-                 materialized repeated in HBM (the old wrapper's
-                 ``jnp.repeat`` cost g x the KV stream traffic).
+                 kernels support: static, traced-scalar, and per-row
+                 ``q_offset`` (the flash kernel's scalar-prefetch path), plus
+                 the paged ``attention_decode`` entry — so the serving decode
+                 hot path runs Pallas end-to-end; only ``key_mask`` (padded
+                 batched prefill) still falls back to masked XLA *by declared
+                 capability*. Attention serves GQA by folding query groups
+                 into the sequence axis — K/V are never materialized repeated
+                 in HBM (the old wrapper's ``jnp.repeat`` cost g x the KV
+                 stream traffic).
   * ``im2col`` - the paper's baseline conv algorithm (materialized patches
                  -> LP-tiled Pallas GEMM), conv2d only, falling through to
                  ``xla`` for everything else. Exists so benchmarks can
@@ -40,14 +43,22 @@ from typing import Callable, Dict, FrozenSet, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
+from repro.core.conv_model import Precision
 from repro.kernels.conv1d import conv1d_causal as _conv1d_pallas
 from repro.kernels.conv2d import (_conv_spec, conv2d as _conv2d_pallas,
                                   conv2d_hbm_words)
-from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.flash_attention import (attention_blocks,
+                                           attention_hbm_words,
+                                           flash_attention as _flash_pallas,
+                                           paged_decode_attention,
+                                           paged_decode_hbm_words)
 from repro.kernels.im2col import conv2d_im2col, im2col_hbm_words
 from repro.kernels.matmul import (_matmul_spec, matmul as _matmul_pallas,
                                   matmul_hbm_words)
 from repro.kernels import ref
+from repro.plan import AttentionSpec
 
 from .context import ExecutionContext
 
@@ -192,6 +203,37 @@ def _xla_attention_entry(ctx, plan, q, k, v, causal=True, q_offset=0,
                         key_mask=key_mask)
 
 
+def xla_attention_decode(q, kp, vp, tables, lengths) -> jax.Array:
+    """Reference paged decode: gather each row's blocks and attend in block
+    layout. The gather materializes a copy of the live cache in HBM — exactly
+    the traffic the Pallas entry's table-following index_map avoids — but the
+    einsums keep the (w, bs) block axes factored, so no transpose/reshape
+    copies follow it."""
+    B, H, Lq, hd = q.shape
+    if Lq != 1:
+        raise ValueError(f"paged decode expects Lq == 1, got {Lq}")
+    KV, bs = kp.shape[1], kp.shape[2]
+    w = tables.shape[1]
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd).astype(jnp.float32)
+    kb = kp[tables]  # (B, w, KV, bs, hd)
+    vb = vp[tables]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bkgd,bwksd->bkgws", qg,
+                        kb.astype(jnp.float32)) * scale
+    pos = jnp.arange(w * bs, dtype=jnp.int32).reshape(w, bs)
+    mask = pos[None] < lengths[:, None, None]  # (B, w, bs)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits.reshape(B, KV, g, w * bs), axis=-1)
+    o = jnp.einsum("bkgws,bwksd->bkgd", probs.reshape(B, KV, g, w, bs),
+                   vb.astype(jnp.float32))
+    return o.reshape(B, H, 1, hd).astype(q.dtype)
+
+
+def _xla_attention_decode_entry(ctx, plan, q, kp, vp, tables, lengths):
+    return xla_attention_decode(q, kp, vp, tables, lengths)
+
+
 # -- plan-spec builders (shared by every backend's instrumented entries) ----
 
 def _matmul_plan_spec(a, b, **kw):
@@ -206,6 +248,27 @@ def _conv2d_plan_spec(x, w, stride=(1, 1), **kw):
     sh, sw = stride
     return _conv_spec(N, c_I, c_O, (H - h_F) // sh + 1, (W - w_F) // sw + 1,
                       h_F, w_F, sh, sw, jnp.dtype(x.dtype).itemsize * 8)
+
+
+def _attention_plan_spec(q, k, v, **kw):
+    B, H, Lq, hd = q.shape
+    KV, Lk = k.shape[1], k.shape[2]
+    p_io = jnp.dtype(q.dtype).itemsize / 4.0
+    p_kv = jnp.dtype(k.dtype).itemsize / 4.0
+    return AttentionSpec(B=B, H=H, KV=KV, Lq=Lq, Lk=Lk, hd=hd,
+                         prec=Precision(p_I=p_io, p_F=p_kv, p_O=p_io))
+
+
+def _attention_decode_plan_spec(q, kp, vp, tables, lengths, **kw):
+    """Paged decode as an AttentionSpec: Lq = 1, Lk = the table window's
+    token capacity (w * block_size) — the keys one decode step streams."""
+    B, H, _, hd = q.shape
+    KV, bs = kp.shape[1], kp.shape[2]
+    w = tables.shape[1]
+    p_io = jnp.dtype(q.dtype).itemsize / 4.0
+    p_kv = jnp.dtype(kp.dtype).itemsize / 4.0
+    return AttentionSpec(B=B, H=H, KV=KV, Lq=1, Lk=w * bs, hd=hd,
+                         prec=Precision(p_I=p_io, p_F=p_kv, p_O=p_io))
 
 
 # -- conv2d_dist: the distributed halo-exchange conv (repro.distributed) ----
@@ -248,6 +311,8 @@ register_backend(Backend(
         "attention": OpEntry(
             _xla_attention_entry,
             OpCapabilities(dtypes=("*",), flags=frozenset(ATTN_FLAGS))),
+        "attention_decode": OpEntry(
+            _xla_attention_decode_entry, OpCapabilities(dtypes=("*",))),
         "conv2d_dist": OpEntry(_dist_entry("xla"), OpCapabilities(dtypes=("*",)),
                                spec_fn=_conv2d_plan_spec,
                                words_fn=_conv2d_dist_words),
@@ -314,30 +379,71 @@ def _pallas_attention(ctx, plan, q, k, v, causal=True, q_offset=0,
     """GQA via group-folding: queries of the g heads sharing one KV head are
     stacked along the sequence axis ((B*Hkv, g*Lq, Dh)), so K/V stream at
     their (B*Hkv, Lk, Dh) size instead of being repeated g x in HBM. The
-    kernel recovers per-query absolute positions with ``q_seq_len``."""
-    assert key_mask is None, "capability-gated: pallas serves no key masks"
+    kernel recovers per-query absolute positions with ``q_seq_len``.
 
-    def fwd(q, k, v):
-        B, H, Lq, Dh = q.shape
-        Hkv, Lk = k.shape[1], k.shape[2]
-        g = H // Hkv
+    A traced scalar or (B,) ``q_offset`` selects the flash kernel's dynamic
+    path (scalar-prefetch offsets). Offsets ride as an explicit int32 operand
+    through ``_with_xla_vjp`` — never closed over — so custom_vjp sees them
+    as a differentiable-in-name-only arg (float0 cotangent) instead of a
+    leaked tracer."""
+    assert key_mask is None, "capability-gated: pallas serves no key masks"
+    B, H, Lq, Dh = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    g = H // Hkv
+
+    if isinstance(q_offset, (int, np.integer)):
+        def fwd(q, k, v):
+            kf = k.reshape(B * Hkv, Lk, Dh)
+            vf = v.reshape(B * Hkv, Lk, Dh)
+            if g == 1:
+                out = _flash_pallas(q.reshape(B * H, Lq, Dh), kf, vf,
+                                    causal=causal, q_offset=q_offset,
+                                    target=ctx.target, interpret=ctx.interpret)
+                return out.reshape(B, H, Lq, Dh)
+            qf = q.reshape(B * Hkv, g * Lq, Dh)  # groups stacked on seq axis
+            out = _flash_pallas(qf, kf, vf, causal=causal, q_offset=q_offset,
+                                q_seq_len=Lq, target=ctx.target,
+                                interpret=ctx.interpret)
+            return out.reshape(B, H, Lq, Dh)
+
+        return _with_xla_vjp(
+            fwd,
+            lambda q_, k_, v_: xla_attention(q_, k_, v_, causal=causal,
+                                             q_offset=q_offset), q, k, v)
+
+    offs = jnp.asarray(q_offset, jnp.int32)
+    per_row = bool(offs.ndim)
+    # row b of the folded (B*Hkv) axis carries batch row b // Hkv
+    row_offs = (jnp.repeat(offs, Hkv) if per_row
+                else jnp.broadcast_to(offs, (B * Hkv,)))
+
+    def fwd(q, k, v, row_offs):
         kf = k.reshape(B * Hkv, Lk, Dh)
         vf = v.reshape(B * Hkv, Lk, Dh)
-        if g == 1:
-            out = _flash_pallas(q.reshape(B * H, Lq, Dh), kf, vf,
-                                causal=causal, q_offset=q_offset,
-                                target=ctx.target, interpret=ctx.interpret)
-            return out.reshape(B, H, Lq, Dh)
-        qf = q.reshape(B * Hkv, g * Lq, Dh)  # groups stacked on the seq axis
-        out = _flash_pallas(qf, kf, vf, causal=causal, q_offset=q_offset,
+        qf = q.reshape(B * Hkv, g * Lq, Dh)
+        out = _flash_pallas(qf, kf, vf, causal=causal, q_offset=row_offs,
                             q_seq_len=Lq, target=ctx.target,
                             interpret=ctx.interpret)
         return out.reshape(B, H, Lq, Dh)
 
-    return _with_xla_vjp(
-        fwd,
-        lambda q_, k_, v_: xla_attention(q_, k_, v_, causal=causal,
-                                         q_offset=q_offset), q, k, v)
+    def xla_fn(q, k, v, row_offs):
+        off = row_offs.reshape(B, Hkv)[:, 0] if per_row else row_offs[0]
+        return xla_attention(q, k, v, causal=causal, q_offset=off)
+
+    return _with_xla_vjp(fwd, xla_fn, q, k, v, row_offs)
+
+
+def _pallas_attention_decode(ctx, plan, q, kp, vp, tables, lengths):
+    """Paged decode on the block-table-gathering kernel; backward recomputes
+    through the XLA gather reference (tables/lengths are int32 operands, so
+    their cotangents are float0)."""
+    def fwd(q, kp, vp, tables, lengths):
+        return paged_decode_attention(q, kp, vp, tables, lengths,
+                                      target=ctx.target,
+                                      interpret=ctx.interpret)
+
+    return _with_xla_vjp(fwd, xla_attention_decode, q, kp, vp,
+                         tables, lengths)
 
 
 def _pallas_matmul_words(ctx, plan, a, b, out_dtype=None, **kw):
@@ -352,6 +458,27 @@ def _pallas_conv2d_words(ctx, plan, x, w, stride=(1, 1), out_dtype=None,
                             out_dtype=out_dtype or ctx.acc_dtype)
 
 
+def _pallas_attention_words(ctx, plan, q, k, v, **kw):
+    B, H, Lq, Dh = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    p_io = jnp.dtype(q.dtype).itemsize / 4.0
+    p_kv = jnp.dtype(k.dtype).itemsize / 4.0
+    bq, bk = attention_blocks(Dh, ctx.target, kv_word=p_kv)
+    return attention_hbm_words(B * Hkv, g * Lq, Lk, Dh, bq, bk,
+                               p_q=p_io, p_kv=p_kv, p_o=p_io)
+
+
+def _pallas_attention_decode_words(ctx, plan, q, kp, vp, tables, lengths,
+                                   **kw):
+    B, H, _, hd = q.shape
+    KV, bs = kp.shape[1], kp.shape[2]
+    p_io = jnp.dtype(q.dtype).itemsize / 4.0
+    p_kv = jnp.dtype(kp.dtype).itemsize / 4.0
+    return paged_decode_hbm_words(B, KV, H // KV, tables.shape[1], bs, hd,
+                                  p_q=p_io, p_kv=p_kv, p_o=p_io)
+
+
 register_backend(Backend(
     name="pallas",
     fallback="xla",
@@ -361,9 +488,19 @@ register_backend(Backend(
         "conv2d": OpEntry(_pallas_conv2d, spec_fn=_conv2d_plan_spec,
                           words_fn=_pallas_conv2d_words),
         "conv1d_causal": OpEntry(_pallas_conv1d),
-        # flash kernel: static scalar q_offset only, no key masks -> the
-        # in-cache decode path falls back to xla by capability.
-        "attention": OpEntry(_pallas_attention, OpCapabilities()),
+        # flash kernel: dynamic (traced scalar or per-row) q_offset rides the
+        # scalar-prefetch path; only key_mask still falls back to masked xla
+        # (padded batched prefill), so the decode hot path never leaves pallas.
+        "attention": OpEntry(
+            _pallas_attention,
+            OpCapabilities(flags=frozenset({"dynamic_q_offset",
+                                            "per_row_q_offset"})),
+            spec_fn=_attention_plan_spec,
+            words_fn=_pallas_attention_words),
+        "attention_decode": OpEntry(
+            _pallas_attention_decode,
+            spec_fn=_attention_decode_plan_spec,
+            words_fn=_pallas_attention_decode_words),
         "conv2d_dist": OpEntry(_dist_entry("pallas"),
                                spec_fn=_conv2d_plan_spec,
                                words_fn=_conv2d_dist_words),

@@ -20,6 +20,7 @@ planner's low-level building blocks.
 """
 
 from .ops import (  # noqa: F401
+    AttentionSpec,
     ConvSpec,
     MatmulSpec,
     OpSpec,

@@ -1,7 +1,7 @@
 """Operation specs: what the planner is asked to lower.
 
-``OpSpec = ConvSpec | MatmulSpec`` — both are hashable value objects so the
-pair (op, target) keys the process-wide plan cache. ``prec=None`` defers the
+``OpSpec = ConvSpec | MatmulSpec | AttentionSpec`` — all hashable value
+objects so the pair (op, target) keys the process-wide plan cache. ``prec=None`` defers the
 precision choice to the target's policy; an explicit ``Precision`` (e.g. built
 from the input dtype by the kernels) overrides it.
 """
@@ -64,7 +64,35 @@ class MatmulSpec:
                 "prec": None if self.prec is None else list(self.prec.as_tuple())}
 
 
-OpSpec = Union[ConvSpec, MatmulSpec]
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """GQA attention as two chained 7NL degenerates (QK^T then PV).
+
+    ``Lq`` is the per-head query length *before* any GQA group folding (the
+    planner accounts the fold itself); ``Lk`` the key/value length; ``KV``
+    the number of distinct KV heads (``KV | H``). Decode is ``Lq == 1``.
+    ``prec`` maps (p_I, p_F, p_O) -> (query, key/value, output) stream
+    widths."""
+
+    B: int
+    H: int
+    KV: int
+    Lq: int
+    Lk: int
+    hd: int
+    prec: Optional[Precision] = None
+
+    def to_shape(self, default_prec: Precision) -> ConvShape:
+        raise TypeError("attention ops have no single ConvShape view; "
+                        "the planner bounds them via core.bounds.attention_bound")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": "attention", "B": self.B, "H": self.H, "KV": self.KV,
+                "Lq": self.Lq, "Lk": self.Lk, "hd": self.hd,
+                "prec": None if self.prec is None else list(self.prec.as_tuple())}
+
+
+OpSpec = Union[ConvSpec, MatmulSpec, AttentionSpec]
 
 
 def op_from_dict(d: Dict[str, Any]) -> OpSpec:
@@ -75,14 +103,17 @@ def op_from_dict(d: Dict[str, Any]) -> OpSpec:
                         sh=d["sh"], prec=prec)
     if d["kind"] == "matmul":
         return MatmulSpec(m=d["m"], n=d["n"], k=d["k"], prec=prec)
+    if d["kind"] == "attention":
+        return AttentionSpec(B=d["B"], H=d["H"], KV=d["KV"], Lq=d["Lq"],
+                             Lk=d["Lk"], hd=d["hd"], prec=prec)
     raise ValueError(f"unknown op kind {d.get('kind')!r}")
 
 
 def as_op_spec(op: Union[OpSpec, ConvShape]) -> OpSpec:
     """Coerce a raw ConvShape (or pass through an OpSpec)."""
-    if isinstance(op, (ConvSpec, MatmulSpec)):
+    if isinstance(op, (ConvSpec, MatmulSpec, AttentionSpec)):
         return op
     if isinstance(op, ConvShape):
         return ConvSpec.from_shape(op)
     raise TypeError(f"cannot plan {type(op).__name__}; "
-                    "expected ConvSpec, MatmulSpec, or ConvShape")
+                    "expected ConvSpec, MatmulSpec, AttentionSpec, or ConvShape")

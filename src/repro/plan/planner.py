@@ -18,15 +18,17 @@ import json
 import threading
 from typing import Any, Dict, Optional, Tuple, Union
 
-from repro.core.bounds import combined_parallel_bound, single_processor_bound
+from repro.core.bounds import (attention_bound, combined_parallel_bound,
+                               single_processor_bound)
 from repro.core.conv_model import ConvShape, Precision, ceil_div, round_up
 from repro.core.parallel_tiling import optimize_parallel_blocking
 from repro.core.sharding_opt import ShardingPlan, plan_conv_sharding
-from repro.core.tiling import (Blocking, conv_kernel_footprints,
-                               fit_conv_kernel_tiles, matmul_blocking,
-                               optimize_blocking, snap_tile)
+from repro.core.tiling import (Blocking, attention_block_size,
+                               conv_kernel_footprints, fit_conv_kernel_tiles,
+                               matmul_blocking, optimize_blocking, snap_tile)
 
-from .ops import ConvSpec, MatmulSpec, OpSpec, as_op_spec, op_from_dict
+from .ops import (AttentionSpec, ConvSpec, MatmulSpec, OpSpec, as_op_spec,
+                  op_from_dict)
 from .target import HardwareTarget, TPU_V5E
 
 # v2: conv tiles/grid widened from (bN, b_cI, b_cO) / 3-axis grids to the
@@ -35,7 +37,9 @@ from .target import HardwareTarget, TPU_V5E
 # v3: multi-device conv plans carry a ``parallel`` section (the integer
 # processor grid the parallel LP chose plus the predicted per-processor
 # words and the Thm 2.2/2.3 bound). v2 dumps load with parallel=None.
-PLAN_FORMAT_VERSION = 3
+# v4: attention plans (kind="attention", closed-form (bq, bk) tiles, bound
+# from core.bounds.attention_bound, empty blocking). Older dumps load as-is.
+PLAN_FORMAT_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +157,9 @@ class ExecutionPlan:
         from jax.experimental import pallas as pl
         from jax.experimental.pallas import tpu as pltpu
 
+        if isinstance(self.op, AttentionSpec):
+            raise TypeError("pallas_specs() on an attention plan: the flash "
+                            "kernels own their BlockSpecs (tiles = (bq, bk))")
         in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
                     pl.BlockSpec(memory_space=pltpu.ANY)]
         if isinstance(self.op, MatmulSpec):
@@ -363,6 +370,35 @@ def _plan_matmul(op: MatmulSpec, target: HardwareTarget) -> ExecutionPlan:
         efficiency=vol / max(lb, 1.0), sharding=sharding)
 
 
+def _plan_attention(op: AttentionSpec, target: HardwareTarget) -> ExecutionPlan:
+    """Closed-form attention plan: the flash schedule's (bq, bk) capacity
+    argument (``core.tiling.attention_block_size``) instead of the conv LP,
+    bounded by Thm 2.1 applied to attention's two GEMMs
+    (``core.bounds.attention_bound``). GQA group folding is accounted here:
+    each of the B*KV kernel batch rows carries g = H/KV stacked query groups,
+    so k/v stream once per folded q tile — exactly the launch geometry
+    ``kernels.flash_attention`` lowers."""
+    prec = op.prec or target.precision
+    mem = target.memory_model()
+    blk = attention_block_size(op.hd, mem.M_eff, p_kv=prec.p_F)
+    g = max(1, op.H // max(op.KV, 1))
+    lqf = g * op.Lq  # the folded query axis of one (batch, kv-head) row
+    sub = max(target.align_sublane, 1)
+    bq = min(blk, round_up(lqf, sub))
+    bk = min(blk, round_up(op.Lk, sub))
+    n_q, n_k = ceil_div(lqf, bq), ceil_div(op.Lk, bk)
+    rows = op.B * op.KV
+    vol = (prec.p_I * rows * n_q * bq * op.hd          # q tiles, loaded once
+           + 2.0 * prec.p_F * rows * n_q * n_k * bk * op.hd  # k/v per q tile
+           + prec.p_O * rows * n_q * bq * op.hd)       # output stores
+    lb = attention_bound(op.B, op.H, op.KV, op.Lq, op.Lk, op.hd,
+                         mem.M_eff, prec).value
+    return ExecutionPlan(
+        op=op, target=target, blocking=(), tiles=(bq, bk),
+        grid=(rows, n_q, n_k), comm_volume=vol, lower_bound=lb,
+        efficiency=vol / max(lb, 1.0))
+
+
 def resolve_kernel_plan(
     op: OpSpec,
     plan: Optional[ExecutionPlan] = None,
@@ -410,6 +446,8 @@ def plan(op: Union[OpSpec, ConvShape], target: HardwareTarget = TPU_V5E
         return cached
     if isinstance(op, ConvSpec):
         built = _plan_conv(op, target)
+    elif isinstance(op, AttentionSpec):
+        built = _plan_attention(op, target)
     else:
         built = _plan_matmul(op, target)
     with _CACHE_LOCK:

@@ -44,7 +44,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-from typing import Any, Deque, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +54,8 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.ops import ExecutionContext
 from repro.plan import CPU_INTERPRET, HardwareTarget
+
+from . import kv
 
 PyTree = Any
 
@@ -92,11 +94,14 @@ class _Slot:
 
 
 def plan_batch_size(cfg: ModelConfig, max_len: int, target: HardwareTarget,
-                    cap: int = 64, hbm_fraction: float = 0.25) -> int:
+                    cap: int = 64, hbm_fraction: float = 0.25,
+                    block_size: Optional[int] = None) -> int:
     """Slot-pool size from the target's memory model: how many ``max_len``
     cache rows fit in a fraction of HBM (params/activations keep the rest),
-    rounded to the MXU sublane multiple so decode GEMMs keep full rows."""
-    slot_words = T.cache_footprint_words(cfg, max_len)
+    rounded to the MXU sublane multiple so decode GEMMs keep full rows.
+    ``block_size`` switches to block-granular footprints (paged engines):
+    admission math then matches actual pool occupancy."""
+    slot_words = T.cache_footprint_words(cfg, max_len, block_size=block_size)
     b = int((hbm_fraction * target.hbm_words) // max(slot_words, 1.0))
     b = max(1, min(cap, b))
     if b >= target.align_sublane > 1:
@@ -152,18 +157,70 @@ def _make_steps(cfg: ModelConfig, max_len: int, ctx: ExecutionContext):
             jax.jit(sample))
 
 
+@functools.lru_cache(maxsize=None)
+def _make_paged_steps(cfg: ModelConfig, max_len: int, ctx: ExecutionContext,
+                      block_size: int):
+    """Compiled (insert, decode) for the paged pool. Prefill and sampling are
+    shared with ``_make_steps`` — prefill still runs contiguous at batch 1;
+    only its landing in the pool and the decode step are paged.
+
+    ``insert`` retraces per distinct block count (<= max_len/block_size
+    variants, the same ladder as the bucketed prefills); ``decode`` retraces
+    per distinct table width w (ditto) — positions and table *contents* are
+    data, never trace constants."""
+
+    def insert(pool, row, blocks):  # row: batch-1 contiguous cache; (nt,) ids
+        nt = blocks.shape[0]
+
+        def scatter(p, r):  # p (R, nb, KV, bs, hd); r (R, 1, KV, max_len, hd)
+            R, _, KV, L, hd = r.shape
+            rb = r[:, 0, :, :min(nt * block_size, L), :]
+            if nt * block_size > L:  # max_len below a whole block: zero-pad
+                rb = jnp.pad(rb, ((0, 0), (0, 0),
+                                  (0, nt * block_size - L), (0, 0)))
+            rb = rb.reshape(R, KV, nt, block_size, hd).transpose(0, 2, 1, 3, 4)
+            return p.at[:, blocks].set(rb.astype(p.dtype))
+
+        return {u: {"kp": scatter(leaves["kp"], row[u]["k"]),
+                    "vp": scatter(leaves["vp"], row[u]["v"])}
+                for u, leaves in pool.items()}
+
+    def decode(params, pool, token, index, tables):  # token (B,1), index (B,)
+        logits, pool, _ = T.forward(params, cfg, tokens=token, cache=pool,
+                                    cache_index=index, decode=True, ctx=ctx,
+                                    block_tables=tables)
+        return logits[:, -1], pool
+
+    return (jax.jit(insert, donate_argnums=(0,)),
+            jax.jit(decode, donate_argnums=(1,)))
+
+
 class Engine:
     """Continuous-batching engine over a fixed slot pool.
 
     ``batch_size=None`` sizes the pool from the ``HardwareTarget``'s memory
     model (``plan_batch_size``); ``ctx=None`` builds the execution context
-    from ``target`` (backend per the ``repro.ops`` resolution order)."""
+    from ``target`` (backend per the ``repro.ops`` resolution order).
+
+    ``paged`` (default: on for pure-attention models) replaces the per-slot
+    contiguous KV assumption with the ``repro.serving.kv`` block pool:
+    admission *reserves* a request's whole block budget up front (shared
+    prompt-prefix blocks counted once, refcounted), turns pool exhaustion
+    into backpressure (the request waits in queue) instead of an overcommit,
+    and the decode step reads K/V straight out of the pool through per-row
+    block tables (``ops.attention_decode`` — Pallas end-to-end, no
+    capability fallback). ``num_blocks=None`` sizes the pool for every slot
+    to reach ``max_len``, capped by the target's HBM budget
+    (``kv.plan_pool_blocks``)."""
 
     def __init__(self, cfg: ModelConfig, params: PyTree, max_len: int = 512,
                  batch_size: Optional[int] = None,
                  ctx: Optional[ExecutionContext] = None,
                  seed: int = 0, target: Optional[HardwareTarget] = None,
-                 prefill_bucket: Optional[int] = None):
+                 prefill_bucket: Optional[int] = None,
+                 paged: Optional[bool] = None,
+                 block_size: int = kv.DEFAULT_BLOCK_SIZE,
+                 num_blocks: Optional[int] = None):
         assert cfg.causal, "serving requires a decoder model"
         self.cfg, self.params = cfg, params
         self.max_len = max_len
@@ -171,9 +228,30 @@ class Engine:
         if ctx is None:
             ctx = ExecutionContext(target=self.target)
         self.ctx = ctx.resolved()
+        attn_only = set(cfg.pattern) == {"attn"}
+        if paged is None:
+            paged = attn_only and not cfg.fused_kv_cache
+        elif paged and not attn_only:
+            raise ValueError(
+                "paged KV requires a pure-attention pattern; recurrent "
+                f"blocks carry O(1) state (pattern={cfg.pattern})")
+        elif paged and cfg.fused_kv_cache:
+            raise ValueError("paged KV uses split k/v pools; "
+                             "disable fused_kv_cache")
+        self.paged = paged
+        self.block_size = block_size
         if batch_size is None:
-            batch_size = plan_batch_size(cfg, max_len, self.target)
+            batch_size = plan_batch_size(
+                cfg, max_len, self.target,
+                block_size=block_size if paged else None)
         self.batch_size = batch_size
+        if paged:
+            if num_blocks is None:
+                num_blocks = kv.plan_pool_blocks(
+                    cfg, max_len, batch_size, block_size, target=self.target)
+            self.num_blocks = num_blocks
+            self._paged_insert, self._paged_decode = _make_paged_steps(
+                cfg, max_len, self.ctx, block_size)
         if prefill_bucket is None:
             # ragged prompts each jit a prefill per distinct length; rounding
             # lengths up to a bucket bounds that to max_len/bucket traces.
@@ -208,7 +286,17 @@ class Engine:
                 raise ValueError("rng_seed must fit in int32")
         queue: Deque[Tuple[int, Request]] = collections.deque(
             enumerate(requests))
-        cache = T.init_cache(self.cfg, B, self.max_len)
+        bs = self.block_size
+        if self.paged:
+            cache = T.init_paged_cache(self.cfg, self.num_blocks, bs)
+            alloc = kv.BlockAllocator(self.num_blocks)
+            tables = np.zeros((B, -(-self.max_len // bs)), np.int32)
+            slot_blocks: List[List[int]] = [[] for _ in range(B)]
+            # device-side table cache: tables only change at admission/finish,
+            # so most decode steps skip the host->device upload
+            tables_dev: Dict[int, jax.Array] = {}  # width -> device slice
+        else:
+            cache = T.init_cache(self.cfg, B, self.max_len)
         slots: List[Optional[_Slot]] = [None] * B
         tok = np.zeros(B, np.int32)    # last accepted token per slot
         pos = np.zeros(B, np.int32)    # cache depth: next decode write offset
@@ -232,6 +320,40 @@ class Engine:
             r.finish_reason = reason
             slots[s] = None
             tok[s], temps[s] = 0, 0.0  # dead row decodes greedily into void
+            if self.paged:
+                for bid in slot_blocks[s]:
+                    alloc.free(bid)  # shared prefixes -> refcount decrements
+                slot_blocks[s] = []
+                tables[s, :] = 0  # dead row reads/writes garbage block 0
+                tables_dev.clear()
+
+        def reserve(r: Request, budget: int) -> Optional[List[int]]:
+            """Reserve the request's whole block budget (prompt + decode
+            growth), sharing registered prompt-prefix blocks. None = the pool
+            cannot cover it now -> admission backpressure."""
+            plen = len(r.prompt)
+            need = -(-(plen + budget - 1) // bs)
+            chain = kv.prefix_chain(r.prompt, bs)
+            hits: List[Tuple[kv.PrefixKey, int]] = []
+            for key in chain:
+                bid = alloc.lookup(key)
+                if bid is None:
+                    break  # chained keys: later blocks cannot match either
+                hits.append((key, bid))
+            fresh = need - len(hits)
+            # an evictable hit leaves the available pool the moment we take a
+            # reference, so it cannot also satisfy a fresh allocation
+            evictable_hits = sum(1 for _, b in hits if alloc.refcount(b) == 0)
+            if alloc.available() - evictable_hits < fresh:
+                return None
+            blocks = [alloc.ref(b) for _, b in hits]
+            for key in chain[len(hits):]:
+                b = alloc.alloc()
+                alloc.register(b, key)  # a full prompt block: shareable
+                blocks.append(b)
+            while len(blocks) < need:  # partial tail + decode growth: private
+                blocks.append(alloc.alloc())
+            return blocks
 
         while queue or any(s is not None for s in slots):
             # -- admission: prefill queued requests into freed slots --------
@@ -239,11 +361,26 @@ class Engine:
                 for s in range(B):
                     if not queue or slots[s] is not None:
                         continue
-                    rid, r = queue.popleft()
+                    rid, r = queue[0]
                     plen = len(r.prompt)
                     # token 1 comes from the prefill logits; token k needs a
                     # cache write at plen + k - 2 <= max_len - 1
                     budget = min(r.max_new_tokens, self.max_len - plen + 1)
+                    if self.paged:
+                        blocks = reserve(r, budget)
+                        if blocks is None:
+                            if not any(x is not None for x in slots):
+                                raise RuntimeError(
+                                    f"paged KV pool of {self.num_blocks} "
+                                    f"blocks cannot ever admit a "
+                                    f"{plen}-token prompt with budget "
+                                    f"{budget}; raise num_blocks")
+                            break  # backpressure: wait for a slot to finish
+                        slot_blocks[s] = blocks
+                        tables[s, :] = 0
+                        tables[s, :len(blocks)] = blocks
+                        tables_dev.clear()
+                    queue.popleft()
                     slots[s] = _Slot(request=r, budget=budget)
                     seeds[s] = r.rng_seed if r.rng_seed is not None else rid
                     temps[s] = r.temperature
@@ -258,7 +395,16 @@ class Engine:
                     logits1, row = self._prefill(
                         self.params, jnp.asarray(tokens), jnp.asarray(mask),
                         jnp.asarray(plen - 1, jnp.int32))
-                    cache = self._insert(cache, row, s)
+                    if self.paged:
+                        # land the prompt's blocks in the pool (a shared hit
+                        # is rewritten with bit-identical K/V: same tokens,
+                        # positions, params; RoPE is applied pre-cache)
+                        nt = -(-plen // bs)
+                        cache = self._paged_insert(
+                            cache, row,
+                            jnp.asarray(slot_blocks[s][:nt], jnp.int32))
+                    else:
+                        cache = self._insert(cache, row, s)
                     first = self._sample(
                         logits1, self.base_key,
                         jnp.asarray(seeds[s:s + 1]),
@@ -270,14 +416,25 @@ class Engine:
                 continue  # everything admitted this round finished instantly
             # -- one lockstep decode step over the pool ---------------------
             # Free rows ride along at a clamped offset; their writes land in
-            # rows that are fully overwritten at the next insert and their
-            # samples are never recorded (active-slot masking).
+            # rows that are fully overwritten at the next insert (contiguous)
+            # or in reserved garbage block 0 (paged) and their samples are
+            # never recorded (active-slot masking).
             steps = np.array([len(slots[s].generated) if slots[s] else 0
                               for s in range(B)], np.int32)
             idx = np.where([slots[s] is not None for s in range(B)], pos, 0)
-            logits, cache = self._decode(
-                self.params, cache, jnp.asarray(tok)[:, None],
-                jnp.asarray(idx, jnp.int32))
+            if self.paged:
+                # table width follows the deepest active row; dead rows are
+                # all-zero (garbage) tables. Shape-driven retrace only.
+                w = max(int(pos[s]) // bs + 1 for s in active)
+                if w not in tables_dev:
+                    tables_dev[w] = jnp.asarray(tables[:, :w])
+                logits, cache = self._paged_decode(
+                    self.params, cache, jnp.asarray(tok)[:, None],
+                    jnp.asarray(idx, jnp.int32), tables_dev[w])
+            else:
+                logits, cache = self._decode(
+                    self.params, cache, jnp.asarray(tok)[:, None],
+                    jnp.asarray(idx, jnp.int32))
             nxt = np.asarray(self._sample(
                 logits, self.base_key, jnp.asarray(seeds),
                 jnp.asarray(steps), jnp.asarray(temps)))

@@ -138,10 +138,12 @@ def test_fake_devices_idempotent_and_fails_late():
 
 
 # ---------------------------------------------------------------------------
-# Plan format v3: the parallel section
+# Plan format v3+: the parallel section (v4 added attention op specs)
 # ---------------------------------------------------------------------------
 
-def test_plan_parallel_section_and_v3_roundtrip():
+def test_plan_parallel_section_roundtrip():
+    from repro.plan import PLAN_FORMAT_VERSION
+
     tgt = TPU_V5E.with_mesh((("N", 2), ("cI", 2), ("hO", 2), ("wO", 1)))
     p = plan(ConvSpec(N=8, c_I=16, c_O=16, w_O=16, h_O=16, w_F=3, h_F=3), tgt)
     assert p.parallel is not None
@@ -149,7 +151,7 @@ def test_plan_parallel_section_and_v3_roundtrip():
     assert math.prod(dict(p.parallel.grid).values()) == 8
     assert p.parallel.comm_words >= 0.0
     d = p.to_dict()
-    assert d["version"] == 3
+    assert d["version"] == PLAN_FORMAT_VERSION >= 3
     assert ExecutionPlan.from_dict(d) == p
 
 

@@ -45,6 +45,12 @@ def _op_case(op: str):
         return (jax.random.normal(KEY, (2, 8, 33, 16)) * 0.3,
                 jax.random.normal(K2, (2, 2, 33, 16)) * 0.3,
                 jax.random.normal(K3, (2, 2, 33, 16))), {"causal": True}
+    if op == "attention_decode":  # paged decode: block-table gather + lengths
+        return (jax.random.normal(KEY, (2, 4, 1, 16)) * 0.3,
+                jax.random.normal(K2, (7, 2, 16, 16)) * 0.3,
+                jax.random.normal(K3, (7, 2, 16, 16)),
+                jnp.asarray([[1, 3, 0], [4, 2, 6]], jnp.int32),
+                jnp.asarray([20, 45], jnp.int32)), {}
     if op == "conv2d_dist":  # P=1 grid: the mesh is one device, so the
         # sweep runs on any host; the real multi-device grids live in
         # tests/test_distributed.py under the CI distributed job
@@ -77,7 +83,8 @@ def test_backends_agree(op, backend):
 def test_every_registered_op_is_swept():
     assert set(ops.backends()) == {"xla", "pallas", "im2col"}
     assert set(ops.registered_ops()) == {
-        "matmul", "conv2d", "conv1d_causal", "attention", "conv2d_dist"}
+        "matmul", "conv2d", "conv1d_causal", "attention", "attention_decode",
+        "conv2d_dist"}
     for op in ops.registered_ops():
         _op_case(op)  # raises if an op was registered without a sweep case
 
@@ -101,23 +108,24 @@ def test_pallas_gqa_grouping_matches_oracle(H, Hkv, Lq, Lk, causal):
 
 
 # ---------------------------------------------------------------------------
-# Capability fallback: pallas attention on cache/masked paths -> masked XLA
+# Capability dispatch: decode offsets are pallas-native since the paged-KV
+# PR (scalar-prefetched into the kernel); only key masks still fall back.
 # ---------------------------------------------------------------------------
 
-def test_explain_fallback_on_decode_features():
+def test_explain_decode_offsets_stay_on_pallas():
     # static prefill call: pallas serves it
     assert ops.explain("attention", PALLAS).chosen == "pallas"
-    # in-cache decode: q_offset is traced -> falls back by capability
+    # in-cache decode: the traced q_offset is scalar-prefetched -> no fallback
     needs = ops.attention_needs(q_offset=jnp.asarray(5, jnp.int32))
     dec = ops.explain("attention", PALLAS, needs=needs)
-    assert dec.requested == "pallas" and dec.chosen == "xla"
-    assert "dynamic_q_offset" in dec.missing and dec.fell_back
-    # continuous-batching decode: per-row offsets
+    assert dec.requested == "pallas" and dec.chosen == "pallas"
+    assert not dec.missing and not dec.fell_back
+    # continuous-batching decode: per-row offsets are served natively too
     needs = ops.attention_needs(q_offset=jnp.arange(4))
-    assert ops.explain("attention", PALLAS, needs=needs).chosen == "xla"
-    # padded prefill: key mask
+    assert ops.explain("attention", PALLAS, needs=needs).chosen == "pallas"
+    # padded prefill: key mask still falls back to masked XLA by capability
     dec = ops.explain("attention", PALLAS, needs=("key_mask",))
-    assert dec.chosen == "xla" and "key_mask" in dec.missing
+    assert dec.chosen == "xla" and "key_mask" in dec.missing and dec.fell_back
     assert "xla" in dec.why()
 
 
@@ -127,26 +135,61 @@ def _tiny_cfg():
                        param_dtype="float32", compute_dtype="float32")
 
 
-def test_in_cache_decode_dispatches_to_xla_by_capability():
-    """The acceptance check: requesting pallas attention on the in-cache
-    decode path dispatches to masked XLA, observed via the trace API."""
+def test_in_cache_decode_stays_on_pallas_end_to_end():
+    """The PR-6 acceptance check: the in-cache decode path dispatches to
+    pallas with NO capability fallback (PR 3 sent it to masked XLA), and the
+    two backends agree numerically; REPRO_BACKEND=xla still selects the old
+    masked-XLA path as the *requested* backend, not a fallback."""
     cfg = _tiny_cfg()
     p = layers.init_attention(KEY, cfg)
     x = jax.random.normal(K2, (2, 1, cfg.d_model))
-    kv = (jnp.zeros((2, 2, 16, cfg.hd)), jnp.zeros((2, 2, 16, cfg.hd)))
+    kv = (jax.random.normal(K3, (2, 2, 16, cfg.hd)) * 0.3,
+          jax.random.normal(KEY, (2, 2, 16, cfg.hd)))
     with ops.record_dispatch() as log:
-        layers.attention_block(p, x, cfg, positions=jnp.asarray([3]),
-                               cache=kv, cache_index=jnp.asarray(3),
-                               ctx=PALLAS)
+        out_p, _ = layers.attention_block(p, x, cfg,
+                                          positions=jnp.asarray([3]),
+                                          cache=kv, cache_index=jnp.asarray(3),
+                                          ctx=PALLAS)
     att = [d for d in log if d.op == "attention"]
-    assert att and att[-1].requested == "pallas" and att[-1].chosen == "xla"
-    assert "dynamic_q_offset" in att[-1].missing
-    # ...while the no-cache prefill path stays on pallas
+    assert att and att[-1].requested == "pallas"
+    assert att[-1].chosen == "pallas" and not att[-1].fell_back
+    with ops.record_dispatch() as log:
+        out_x, _ = layers.attention_block(p, x, cfg,
+                                          positions=jnp.asarray([3]),
+                                          cache=kv, cache_index=jnp.asarray(3),
+                                          ctx=XLA)
+    att = [d for d in log if d.op == "attention"]
+    assert att and att[-1].chosen == "xla" and not att[-1].fell_back
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_x),
+                               rtol=2e-3, atol=2e-3)
+    # ...and the no-cache prefill path stays on pallas as before
     with ops.record_dispatch() as log:
         layers.attention_block(p, x, cfg, positions=jnp.asarray([0]),
                                ctx=PALLAS)
     att = [d for d in log if d.op == "attention"]
     assert att and att[-1].chosen == "pallas" and not att[-1].fell_back
+
+
+def test_paged_decode_explain_no_fallback_and_bound(monkeypatch):
+    """Pooled decode dispatch is shape-only explainable: pallas chosen with
+    no fallback, measured decode words reported against the Lq=1 attention
+    bound; forcing REPRO_BACKEND=xla picks xla as requested (no fallback)."""
+    spec = (jax.ShapeDtypeStruct((2, 4, 1, 16), jnp.bfloat16),
+            jax.ShapeDtypeStruct((7, 2, 16, 16), jnp.bfloat16),
+            jax.ShapeDtypeStruct((7, 2, 16, 16), jnp.bfloat16),
+            jax.ShapeDtypeStruct((2, 3), jnp.int32),
+            jax.ShapeDtypeStruct((2,), jnp.int32))
+    dec = ops.explain("attention_decode", PALLAS, spec_args=spec)
+    assert dec.chosen == "pallas" and not dec.fell_back
+    assert dec.measured_words is not None and dec.plan is not None
+    assert dec.bound_ratio == pytest.approx(
+        dec.measured_words / dec.plan.lower_bound, rel=1e-6)
+    assert "HBM words" in dec.why()
+    monkeypatch.setenv(ops.BACKEND_ENV, "xla")
+    dec = ops.explain("attention_decode", ops.ExecutionContext(target=TPU_V5E),
+                      spec_args=spec)
+    assert dec.requested == "xla" and dec.chosen == "xla"
+    assert not dec.fell_back
 
 
 def test_pallas_backend_is_differentiable():

@@ -1,6 +1,7 @@
 """Serving engine tests: slot-based continuous batching, batch invariance
 (greedy and sampled), EOS / cache-limit accounting, seeded reproducibility,
-wave-baseline parity, recurrent-arch decode, plan-aware batch sizing."""
+wave-baseline parity, recurrent-arch decode, plan-aware batch sizing, and
+the paged KV-cache mode (block tables, prefix sharing, backpressure)."""
 
 import dataclasses
 
@@ -9,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import ops
 from repro.configs import get_smoke
 from repro.models import transformer as T
 from repro.plan import CPU_INTERPRET
@@ -222,6 +224,109 @@ def test_plan_batch_size_from_target():
     # alignment: pools at/above the sublane multiple are rounded to it
     if b >= CPU_INTERPRET.align_sublane:
         assert b % CPU_INTERPRET.align_sublane == 0
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-cache mode: block tables replace the per-slot contiguous cache.
+# ---------------------------------------------------------------------------
+
+def _spec_reqs(rng, n=7, shared_prefix=16):
+    """A mixed workload: varied lengths plus two requests sharing a full-
+    block prompt prefix, one of them sampled with a pinned seed."""
+    reqs = []
+    for _ in range(n):
+        plen = int(rng.integers(2, 20))
+        reqs.append(Request(
+            prompt=rng.integers(1, 64, size=plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 10))))
+    shared = rng.integers(1, 64, size=shared_prefix).astype(np.int32)
+    for tail, temp in ((3, 0.0), (5, 0.9)):
+        p = np.concatenate(
+            [shared, rng.integers(1, 64, size=tail).astype(np.int32)])
+        reqs.append(Request(prompt=p, max_new_tokens=6, temperature=temp,
+                            rng_seed=11))
+    return reqs
+
+
+def test_paged_matches_contiguous_outputs():
+    """The tentpole invariant: switching the KV layout from per-slot
+    contiguous to paged blocks changes no tokens — including across shared
+    prompt prefixes and a sampled request."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    a = _spec_reqs(np.random.default_rng(5))
+    b = _spec_reqs(np.random.default_rng(5))
+    Engine(cfg, params, max_len=64, batch_size=3, paged=False).serve(a)
+    eng = Engine(cfg, params, max_len=64, batch_size=3, paged=True)
+    assert eng.paged and eng.num_blocks >= 1 + 64 // eng.block_size
+    eng.serve(b)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.out_tokens, rb.out_tokens)
+        assert ra.finish_reason == rb.finish_reason
+
+
+def test_paged_is_default_only_for_pure_attention():
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    assert Engine(cfg, params, max_len=32, batch_size=1).paged
+    hp, hybrid = _params_and_cfg("jamba_1_5_large")
+    assert not Engine(hybrid, hp, max_len=32, batch_size=1).paged
+    with pytest.raises(ValueError, match="pure-attention"):
+        Engine(hybrid, hp, max_len=32, batch_size=1, paged=True)
+    fused = dataclasses.replace(cfg, fused_kv_cache=True)
+    with pytest.raises(ValueError, match="fused"):
+        Engine(fused, params, max_len=32, batch_size=1, paged=True)
+
+
+def test_paged_backpressure_completes_all_requests():
+    """A pool too small for the full batch admits what fits, re-queues the
+    rest, and still produces the exact contiguous-engine outputs."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    mk = lambda: [Request(prompt=np.full(20, i + 1, np.int32),
+                          max_new_tokens=25) for i in range(5)]
+    ref = mk()
+    Engine(cfg, params, max_len=64, batch_size=4, paged=False).serve(ref)
+    # each request needs ceil((20 + 25 - 1) / 16) = 3 blocks; 7 usable
+    # blocks hold at most two concurrent requests of the four slots
+    got = mk()
+    Engine(cfg, params, max_len=64, batch_size=4, paged=True,
+           num_blocks=1 + 7).serve(got)
+    for ra, rb in zip(ref, got):
+        np.testing.assert_array_equal(ra.out_tokens, rb.out_tokens)
+        assert rb.finish_reason == "length"
+
+
+def test_paged_pool_that_can_never_admit_raises():
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    eng = Engine(cfg, params, max_len=64, batch_size=2, paged=True,
+                 num_blocks=1 + 2)
+    with pytest.raises(RuntimeError, match="cannot ever admit"):
+        eng.serve([Request(prompt=np.arange(1, 40, dtype=np.int32),
+                           max_new_tokens=20)])
+
+
+def test_paged_decode_dispatches_to_pallas_no_fallback():
+    """Regression for the PR-6 acceptance criterion: pooled decode runs the
+    pallas attention_decode entry with no capability fallback; an xla
+    override serves the same op as requested."""
+    params, cfg = _params_and_cfg("stablelm_1_6b")
+    req = lambda: [Request(prompt=P1, max_new_tokens=4)]
+    with ops.record_dispatch() as log:
+        Engine(cfg, params, max_len=48, batch_size=1, paged=True,
+               ctx=ops.ExecutionContext(backend="pallas")).serve(req())
+    dec = [d for d in log if d.op == "attention_decode"]
+    assert dec and all(d.chosen == "pallas" and not d.fell_back for d in dec)
+    with ops.record_dispatch() as log:
+        Engine(cfg, params, max_len=40, batch_size=1, paged=True,
+               ctx=ops.ExecutionContext(backend="xla")).serve(req())
+    dec = [d for d in log if d.op == "attention_decode"]
+    assert dec and all(d.chosen == "xla" and not d.fell_back for d in dec)
+
+
+def test_plan_batch_size_block_granularity():
+    """Paged sizing rounds the per-request footprint up to whole blocks, so
+    a block-size-misaligned max_len plans no more slots than contiguous."""
+    _, cfg = _params_and_cfg("stablelm_1_6b")
+    b = plan_batch_size(cfg, 24, CPU_INTERPRET, block_size=16)
+    assert 1 <= b <= plan_batch_size(cfg, 24, CPU_INTERPRET)
 
 
 def test_slot_cache_ops_roundtrip():
