@@ -42,8 +42,14 @@ def _metrics(rec: dict) -> Dict[str, float]:
 
 
 def compare(current: List[dict], baseline: List[dict],
-            tolerance: float = TOLERANCE) -> List[Tuple[str, str]]:
-    """Regressions as (row key, description) pairs; empty = gate passes."""
+            tolerance: float = TOLERANCE,
+            exact: bool = False) -> List[Tuple[str, str]]:
+    """Regressions as (row key, description) pairs; empty = gate passes.
+
+    With ``exact=True`` every metric must match the baseline bit-for-bit in
+    *both* directions — the static-verification gate, where the audited word
+    counts are deterministic and any drift (even an "improvement") means a
+    word model silently changed."""
     cur = {_key(r): r for r in current}
     problems: List[Tuple[str, str]] = []
     for base_rec in baseline:
@@ -57,6 +63,12 @@ def compare(current: List[dict], baseline: List[dict],
                 problems.append((key, f"metric {name} missing"))
                 continue
             cur_v = cur_m[name]
+            if exact:
+                if cur_v != base_v:
+                    problems.append(
+                        (key, f"{name} drifted from the baseline: "
+                              f"{base_v!r} -> {cur_v!r}"))
+                continue
             # guard the degenerate baseline (0 words: nothing may appear)
             limit = base_v * (1.0 + tolerance) if base_v > 0 else 1e-9
             if cur_v > limit:
@@ -75,12 +87,15 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=TOLERANCE,
                     help="allowed fractional growth per metric "
                          f"(default {TOLERANCE})")
+    ap.add_argument("--exact", action="store_true",
+                    help="require bit-identical metrics in both directions "
+                         "(the deterministic static-verification gate)")
     args = ap.parse_args(argv)
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    problems = compare(current, baseline, args.tolerance)
+    problems = compare(current, baseline, args.tolerance, exact=args.exact)
     n_metrics = sum(len(_metrics(r)) for r in baseline)
     if problems:
         print(f"FAIL: {len(problems)} regression(s) vs {args.baseline}:",
@@ -88,8 +103,10 @@ def main(argv=None) -> int:
         for key, desc in problems:
             print(f"  {key}: {desc}", file=sys.stderr)
         return 2
-    print(f"OK: {len(baseline)} rows / {n_metrics} metrics within "
-          f"{args.tolerance:.0%} of {args.baseline}")
+    bound = "bit-identical to" if args.exact else \
+        f"within {args.tolerance:.0%} of"
+    print(f"OK: {len(baseline)} rows / {n_metrics} metrics {bound} "
+          f"{args.baseline}")
     return 0
 
 

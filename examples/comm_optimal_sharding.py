@@ -9,10 +9,9 @@ cross-checks the result against the unsharded oracle.
     PYTHONPATH=src python examples/comm_optimal_sharding.py
 """
 
-import os
+from repro.launch import fake_devices
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=8")
+fake_devices(8)  # before any jax device query
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402

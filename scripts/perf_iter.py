@@ -12,13 +12,14 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=" +
-                           os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
 os.environ.setdefault("REPRO_UNROLL_SCANS", "1")
 
 import argparse  # noqa: E402
 import json  # noqa: E402
+
+from repro.launch.dryrun import ensure_dryrun_devices  # noqa: E402
+
+ensure_dryrun_devices()
 
 
 def parse_override(kv: str):

@@ -24,6 +24,21 @@ PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
 
+# The unit every words_fn / bound / static audit counts in: 32-bit words.
+WORD_BYTES = 4
+
+
+def words_to_bytes(words: float) -> float:
+    """32-bit words (the paper's and ``repro.verify``'s unit) -> bytes."""
+    return float(words) * WORD_BYTES
+
+
+def hbm_seconds(words: float, chips: int = 1) -> float:
+    """Roofline memory time for a word count — the bridge from the static
+    auditor's exact HBM words to the same time model the dry-run rooflines
+    use (``memory_s = bytes / (chips * HBM_BW)``)."""
+    return words_to_bytes(words) / (chips * HBM_BW)
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "s32": 4, "u32": 4, "s64": 8, "u64": 8,

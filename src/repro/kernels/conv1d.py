@@ -63,3 +63,76 @@ def conv1d_causal(
         interpret=interpret,
     )(x, w)
     return out[:B, :, :D]
+
+
+def _conv1d_geometry(x, w, tiles: Tuple[int, int] | None,
+                     target: Optional[HardwareTarget]):
+    """(bB, bD, Bp, Dp, grid) — the launch geometry :func:`conv1d_causal`
+    lowers, shared with the words counter and the access plan."""
+    B, L, D = x.shape
+    lane = target.align_lane if target is not None else 128
+    sublane = target.align_sublane if target is not None else 8
+    bB, bD = tiles or (max(1, min(B, sublane)), max(1, min(D, lane)))
+    Bp, Dp = round_up(B, bB), round_up(D, bD)
+    return bB, bD, Bp, Dp, (Bp // bB, Dp // bD)
+
+
+def conv1d_hbm_words(
+    x,  # array or ShapeDtypeStruct, (B, L, D)
+    w,  # array or ShapeDtypeStruct, (K, D)
+    tiles: Tuple[int, int] | None = None,
+    target: Optional[HardwareTarget] = None,
+) -> float:
+    """Measured HBM words (32-bit) one ``conv1d_causal`` dispatch moves: one
+    padded input block in and one output block out per (i, j) grid step, plus
+    the (K, bD) filter block — fetched once per step when the channel grid
+    has > 1 column (its index map (0, j) changes every step), but only once
+    in total when nD == 1 (the index map is then constant and Pallas elides
+    the re-fetch). Shapes/dtypes only (``jax.ShapeDtypeStruct`` works)."""
+    L = x.shape[1]
+    K = w.shape[0]
+    bB, bD, Bp, Dp, grid = _conv1d_geometry(x, w, tiles, target)
+    nB, nD = grid
+    p_x = jnp.dtype(x.dtype).itemsize / 4.0
+    p_w = jnp.dtype(w.dtype).itemsize / 4.0
+    w_fetches = nB * nD if nD > 1 else 1
+    return (nB * nD * bB * L * bD * p_x  # input blocks (out dtype = x dtype)
+            + w_fetches * K * bD * p_w  # filter blocks
+            + nB * nD * bB * L * bD * p_x)  # output stores
+
+
+def conv1d_access_plan(
+    x,  # array or ShapeDtypeStruct, (B, L, D)
+    w,  # array or ShapeDtypeStruct, (K, D)
+    tiles: Tuple[int, int] | None = None,
+    target: Optional[HardwareTarget] = None,
+    op: str = "conv1d_causal",
+):
+    """The :class:`repro.verify.access.KernelAccessPlan` of one
+    ``conv1d_causal`` launch (pure BlockSpec pipeline, no manual DMA)."""
+    from repro.verify.access import (BlockAccess, KernelAccessPlan,
+                                     ScratchAlloc)
+
+    L = x.shape[1]
+    K = w.shape[0]
+    bB, bD, Bp, Dp, grid = _conv1d_geometry(x, w, tiles, target)
+    p_x = jnp.dtype(x.dtype).itemsize / 4.0
+    p_w = jnp.dtype(w.dtype).itemsize / 4.0
+    accesses = (
+        BlockAccess(name="x", kind="load", block_shape=(bB, L, bD),
+                    array_shape=(Bp, L, Dp), word_size=p_x,
+                    index_map=lambda i, j: (i, 0, j)),
+        BlockAccess(name="w", kind="load", block_shape=(K, bD),
+                    array_shape=(K, Dp), word_size=p_w,
+                    index_map=lambda i, j: (0, j)),
+        BlockAccess(name="out", kind="store", block_shape=(bB, L, bD),
+                    array_shape=(Bp, L, Dp), word_size=p_x,
+                    index_map=lambda i, j: (i, 0, j)),
+    )
+    scratch = (
+        ScratchAlloc("x_pipeline[2]", 2 * bB * L * bD * p_x),
+        ScratchAlloc("w_pipeline[2]", 2 * K * bD * p_w),
+        ScratchAlloc("out_pipeline[2]", 2 * bB * L * bD * p_x),
+    )
+    return KernelAccessPlan(op=op, grid=grid, accesses=accesses,
+                            scratch=scratch)

@@ -231,6 +231,86 @@ def conv2d_shard(
                   target=target, interpret=interpret)
 
 
+def conv2d_access_plan(
+    x,  # array or ShapeDtypeStruct, (N, c_I, H, W)
+    w,  # array or ShapeDtypeStruct, (c_O, c_I, h_F, w_F)
+    stride: Tuple[int, int] = (1, 1),
+    tiles: Optional[Sequence[int]] = None,
+    plan: Optional[ExecutionPlan] = None,
+    target: Optional[HardwareTarget] = None,
+    out_dtype=jnp.float32,
+):
+    """The :class:`repro.verify.access.KernelAccessPlan` of one ``conv2d``
+    launch, restated from :func:`_launch_geometry`.
+
+    The input's ``requires`` region is derived *independently* of the DMA
+    window — from the output rows of the tile through the strided tap
+    arithmetic (output row o, tap hf reads input row o*sh + hf) — so an
+    off-by-one halo window fails the auditor's coverage check even though
+    its word count is unchanged."""
+    from repro.verify.access import (BlockAccess, KernelAccessPlan,
+                                     ScratchAlloc, WindowAccess)
+    from repro.verify.hazards import double_buffered_schedule
+
+    N, c_I, H, W = x.shape
+    c_O, _, h_F, w_F = w.shape
+    sh, sw = stride
+    h_O = (H - h_F) // sh + 1
+    w_O = (W - w_F) // sw + 1
+    in_bits = jnp.dtype(x.dtype).itemsize * 8
+    t, _ = resolve_kernel_plan(
+        _conv_spec(N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, in_bits),
+        plan=plan, target=target, tiles=tiles)
+    t = _normalize_tiles(t, h_O, w_O)
+    bN, b_cI, b_cO, bh, bw = t
+    (Np, cIp, cOp, hOp, wOp, Hp, Wp, h_in, w_in,
+     grid) = _launch_geometry(N, c_I, c_O, H, W, h_F, w_F, sh, sw, t)
+    p_in = jnp.dtype(x.dtype).itemsize / 4.0
+    p_flt = jnp.dtype(w.dtype).itemsize / 4.0
+    p_out = jnp.dtype(out_dtype).itemsize / 4.0
+
+    def x_requires(n, co, h, wb, ci):
+        # first/last output row of the tile -> strided tap extent
+        row_lo, row_hi = h * bh, h * bh + bh - 1
+        col_lo, col_hi = wb * bw, wb * bw + bw - 1
+        return ((n * bN, (n + 1) * bN),
+                (ci * b_cI, (ci + 1) * b_cI),
+                (row_lo * sh, row_hi * sh + h_F),
+                (col_lo * sw, col_hi * sw + w_F))
+
+    accesses = (
+        WindowAccess(
+            name="input", kind="load", array_shape=(Np, cIp, Hp, Wp),
+            word_size=p_in,
+            window=lambda n, co, h, wb, ci: (
+                (n * bN, bN), (ci * b_cI, b_cI),
+                (h * bh * sh, h_in), (wb * bw * sw, w_in)),
+            requires=x_requires),
+        WindowAccess(
+            name="filter", kind="load", array_shape=(cOp, cIp, h_F, w_F),
+            word_size=p_flt,
+            window=lambda n, co, h, wb, ci: (
+                (co * b_cO, b_cO), (ci * b_cI, b_cI), (0, h_F), (0, w_F)),
+            requires=lambda n, co, h, wb, ci: (
+                (co * b_cO, (co + 1) * b_cO), (ci * b_cI, (ci + 1) * b_cI),
+                (0, h_F), (0, w_F))),
+        BlockAccess(
+            name="output", kind="store", block_shape=(bN, b_cO, bh, bw),
+            array_shape=(Np, cOp, hOp, wOp), word_size=p_out,
+            index_map=lambda n, co, h, wb, ci: (n, co, h, wb)),
+    )
+    scratch = (
+        ScratchAlloc("x_vmem[2]", 2 * bN * b_cI * h_in * w_in * p_in),
+        ScratchAlloc("w_vmem[2]", 2 * b_cO * b_cI * h_F * w_F * p_flt),
+        ScratchAlloc("acc_f32", float(bN * b_cO * bh * bw)),
+    )
+    return KernelAccessPlan(
+        op="conv2d", grid=grid, accesses=accesses, scratch=scratch,
+        dma=double_buffered_schedule(grid[4], n_slots=2,
+                                     name="input/filter c_I stream"),
+        note="DMA schedule repeats identically per (n, co, h, w) tile")
+
+
 def conv2d_hbm_words(
     x,  # array or ShapeDtypeStruct, (N, c_I, H, W)
     w,  # array or ShapeDtypeStruct, (c_O, c_I, h_F, w_F)

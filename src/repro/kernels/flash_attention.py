@@ -363,14 +363,125 @@ def attention_hbm_words(BH: int, Lq: int, Lk: int, dh: int,
                         p_o: float = 1.0) -> float:
     """Words the flash launch moves: q tiles once, k/v streamed once per q
     tile, o stored once — the same accounting ``plan(AttentionSpec)`` models,
-    evaluated at the kernel's actual clamped/padded blocks."""
+    evaluated at the kernel's actual clamped/padded blocks.
+
+    When the whole key stream is a single block (n_k == 1) the k/v index map
+    (b, j, 0) is constant across the q-tile axis, so Pallas fetches k/v once
+    per batch row, not once per q tile — the static auditor
+    (``repro.verify``) counts index-map *transitions* and caught the
+    per-q-tile formula overcounting exactly this corner."""
     bq = min(block_q, round_up(Lq, 8))
     bk = min(block_k, round_up(Lk, 8))
     lqp, lkp = round_up(Lq, bq), round_up(Lk, bk)
-    n_q = lqp // bq
+    n_q, n_k = lqp // bq, lkp // bk
+    kv_fetches = n_q if n_k > 1 else 1
     return (p_q * BH * lqp * dh
-            + 2.0 * p_kv * BH * n_q * lkp * dh
+            + 2.0 * p_kv * BH * kv_fetches * lkp * dh
             + p_o * BH * lqp * dh)
+
+
+def flash_attention_access_plan(BH: int, Lq: int, Lk: int, dh: int,
+                                block_q: int, block_k: int,
+                                p_q: float = 1.0, p_kv: float = 1.0,
+                                p_o: float = 1.0, dynamic: bool = False,
+                                op: str = "attention"):
+    """The :class:`repro.verify.access.KernelAccessPlan` of one flash launch
+    over the folded (BH, Lq) view (``Lq`` = g * per-head queries after the
+    registry's GQA fold). ``dynamic=True`` adds the scalar-prefetched
+    q_offset/kv_lens operands of ``_flash_kernel_dyn`` — recorded as
+    *uncounted* traffic, mirroring ``attention_hbm_words`` which charges
+    only the tensor streams (2 x BH int32 words, O(BH) against O(BH*L*dh))."""
+    from repro.verify.access import (BlockAccess, FlatAccess,
+                                     KernelAccessPlan, ScratchAlloc)
+
+    bq = min(block_q, round_up(Lq, 8))
+    bk = min(block_k, round_up(Lk, 8))
+    lqp, lkp = round_up(Lq, bq), round_up(Lk, bk)
+    n_q, n_k = lqp // bq, lkp // bk
+    accesses = [
+        BlockAccess(name="q", kind="load", block_shape=(1, bq, dh),
+                    array_shape=(BH, lqp, dh), word_size=p_q,
+                    index_map=lambda b, i, j: (b, i, 0)),
+        BlockAccess(name="k", kind="load", block_shape=(1, bk, dh),
+                    array_shape=(BH, lkp, dh), word_size=p_kv,
+                    index_map=lambda b, i, j: (b, j, 0)),
+        BlockAccess(name="v", kind="load", block_shape=(1, bk, dh),
+                    array_shape=(BH, lkp, dh), word_size=p_kv,
+                    index_map=lambda b, i, j: (b, j, 0)),
+        BlockAccess(name="out", kind="store", block_shape=(1, bq, dh),
+                    array_shape=(BH, lqp, dh), word_size=p_o,
+                    index_map=lambda b, i, j: (b, i, 0)),
+    ]
+    if dynamic:
+        accesses += [
+            FlatAccess(name="q_offset", kind="load", words=float(BH),
+                       counted=False, note="scalar prefetch, uncharged"),
+            FlatAccess(name="kv_lens", kind="load", words=float(BH),
+                       counted=False, note="scalar prefetch, uncharged"),
+        ]
+    scratch = (
+        ScratchAlloc("m/l/acc_f32", float(bq + bq + bq * dh)),
+        ScratchAlloc("q_pipeline[2]", 2 * bq * dh * p_q),
+        ScratchAlloc("kv_pipeline[2x2]", 4 * bk * dh * p_kv),
+        ScratchAlloc("out_pipeline[2]", 2 * bq * dh * p_o),
+    )
+    return KernelAccessPlan(op=op, grid=(BH, n_q, n_k),
+                            accesses=tuple(accesses), scratch=scratch)
+
+
+def paged_decode_access_plan(B: int, KV: int, g: int, w: int,
+                             block_size: int, hd: int, num_blocks: int,
+                             p_q: float = 1.0, p_kv: float = 1.0,
+                             p_o: float = 1.0, tables=None,
+                             op: str = "attention_decode"):
+    """The :class:`repro.verify.access.KernelAccessPlan` of one paged decode
+    launch. ``tables`` defaults to a synthetic table with all-distinct
+    consecutive physical blocks — the allocator's normal output — which is
+    the traffic-maximal case ``paged_decode_hbm_words`` charges (a table
+    that happens to repeat a block in consecutive slots would move less:
+    the index map (t[b, j], h) elides the re-fetch)."""
+    import numpy as np
+
+    from repro.verify.access import (BlockAccess, FlatAccess,
+                                     KernelAccessPlan, ScratchAlloc)
+
+    if tables is None:
+        tables = (np.arange(B * w, dtype=np.int64).reshape(B, w)
+                  % max(num_blocks, 1))
+        if num_blocks < 2 and w > 1:
+            raise ValueError("paged pool with < 2 blocks cannot have "
+                             "all-distinct consecutive table entries")
+    t = np.asarray(tables, dtype=np.int64)
+    accesses = (
+        BlockAccess(name="q", kind="load", block_shape=(1, 1, g, hd),
+                    array_shape=(B, KV, g, hd), word_size=p_q,
+                    index_map=lambda b, h, j: (b, h, 0, 0)),
+        BlockAccess(name="k_pool", kind="load",
+                    block_shape=(1, 1, block_size, hd),
+                    array_shape=(num_blocks, KV, block_size, hd),
+                    word_size=p_kv,
+                    index_map=lambda b, h, j: (t[b, j], h, 0, 0)),
+        BlockAccess(name="v_pool", kind="load",
+                    block_shape=(1, 1, block_size, hd),
+                    array_shape=(num_blocks, KV, block_size, hd),
+                    word_size=p_kv,
+                    index_map=lambda b, h, j: (t[b, j], h, 0, 0)),
+        BlockAccess(name="out", kind="store", block_shape=(1, 1, g, hd),
+                    array_shape=(B, KV, g, hd), word_size=p_o,
+                    index_map=lambda b, h, j: (b, h, 0, 0)),
+        FlatAccess(name="tables", kind="load", words=float(B * w),
+                   note="int32 scalar prefetch, charged by words_fn"),
+        FlatAccess(name="lengths", kind="load", words=float(B),
+                   note="int32 scalar prefetch, charged by words_fn"),
+    )
+    scratch = (
+        ScratchAlloc("m/l/acc_f32", float(g + g + g * hd)),
+        ScratchAlloc("q_pipeline[2]", 2 * g * hd * p_q),
+        ScratchAlloc("kv_pipeline[2x2]", 4 * block_size * hd * p_kv),
+        ScratchAlloc("out_pipeline[2]", 2 * g * hd * p_o),
+    )
+    return KernelAccessPlan(op=op, grid=(B, KV, w), accesses=accesses,
+                            scratch=scratch)
 
 
 def paged_decode_hbm_words(B: int, KV: int, g: int, w: int, block_size: int,

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.plan import ExecutionPlan, HardwareTarget
 
-from .matmul import matmul, matmul_hbm_words
+from .matmul import matmul, matmul_access_plan, matmul_hbm_words
 
 
 def im2col_patches(x: jax.Array, h_F: int, w_F: int,
@@ -96,3 +96,42 @@ def im2col_hbm_words(
         jax.ShapeDtypeStruct((k, c_O), w.dtype),
         target=target, out_dtype=out_dtype)
     return expand + gemm
+
+
+def im2col_access_plan(
+    x,  # array or ShapeDtypeStruct, (N, c_I, H, W)
+    w,  # array or ShapeDtypeStruct, (c_O, c_I, h_F, w_F)
+    stride: Tuple[int, int] = (1, 1),
+    target: Optional[HardwareTarget] = None,
+    out_dtype=jnp.float32,
+):
+    """The :class:`repro.verify.access.KernelAccessPlan` of one
+    ``conv2d_im2col`` dispatch: the GEMM's access plan (same grid, same A/B
+    windows over the patch matrix) prefixed with the XLA patch expansion as
+    flat traffic — read the input once, write the (m, k) patch matrix once —
+    exactly what ``im2col_hbm_words`` charges."""
+    import dataclasses as _dc
+
+    from repro.verify.access import FlatAccess
+
+    N, c_I, H, W = x.shape
+    c_O, _, h_F, w_F = w.shape
+    sh, sw = stride
+    h_O = (H - h_F) // sh + 1
+    w_O = (W - w_F) // sw + 1
+    m, k = N * h_O * w_O, c_I * h_F * w_F
+    p_in = jnp.dtype(x.dtype).itemsize / 4.0
+    gemm = matmul_access_plan(
+        jax.ShapeDtypeStruct((m, k), x.dtype),
+        jax.ShapeDtypeStruct((k, c_O), w.dtype),
+        target=target, out_dtype=out_dtype, op="conv2d[im2col]")
+    expand = (
+        FlatAccess(name="im2col_input_read", kind="load",
+                   words=p_in * N * c_I * H * W,
+                   note="XLA patch expansion reads the input once"),
+        FlatAccess(name="im2col_patch_write", kind="store",
+                   words=p_in * float(m) * k,
+                   note="XLA patch expansion writes the (m, k) matrix"),
+    )
+    return _dc.replace(gemm, accesses=expand + gemm.accesses,
+                       note="patch expansion + LP-tiled GEMM")

@@ -125,6 +125,61 @@ def matmul(
     return out[:m, :n]
 
 
+def matmul_access_plan(
+    a,  # array or ShapeDtypeStruct, (m, k)
+    b,  # array or ShapeDtypeStruct, (k, n)
+    tiles: Optional[Tuple[int, int, int]] = None,
+    plan: Optional[ExecutionPlan] = None,
+    target: Optional[HardwareTarget] = None,
+    out_dtype=jnp.float32,
+    op: str = "matmul",
+):
+    """The :class:`repro.verify.access.KernelAccessPlan` of one ``matmul``
+    launch: the A/B halo-free DMA windows streamed every (i, j, k) step, the
+    blocked output store, the two-slot VMEM scratch, and the double-buffered
+    DMA schedule over the k reduction — restated from the same geometry the
+    kernel lowers so ``repro.verify.audit`` can cross-check ``words_fn``."""
+    from repro.verify.access import (BlockAccess, KernelAccessPlan,
+                                     ScratchAlloc, WindowAccess)
+    from repro.verify.hazards import double_buffered_schedule
+
+    m, k = a.shape
+    n = b.shape[1]
+    in_bits = jnp.dtype(a.dtype).itemsize * 8
+    (bm, bn, bk), _ = resolve_kernel_plan(
+        _matmul_spec(m, n, k, in_bits), plan=plan, target=target, tiles=tiles)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    p_a = jnp.dtype(a.dtype).itemsize / 4.0
+    p_b = jnp.dtype(b.dtype).itemsize / 4.0
+    p_out = jnp.dtype(out_dtype).itemsize / 4.0
+    accesses = (
+        WindowAccess(
+            name="a", kind="load", array_shape=(mp, kp), word_size=p_a,
+            window=lambda i, j, ki: ((i * bm, bm), (ki * bk, bk)),
+            requires=lambda i, j, ki: ((i * bm, (i + 1) * bm),
+                                       (ki * bk, (ki + 1) * bk))),
+        WindowAccess(
+            name="b", kind="load", array_shape=(kp, np_), word_size=p_b,
+            window=lambda i, j, ki: ((ki * bk, bk), (j * bn, bn)),
+            requires=lambda i, j, ki: ((ki * bk, (ki + 1) * bk),
+                                       (j * bn, (j + 1) * bn))),
+        BlockAccess(
+            name="out", kind="store", block_shape=(bm, bn),
+            array_shape=(mp, np_), word_size=p_out,
+            index_map=lambda i, j, ki: (i, j)),
+    )
+    scratch = (
+        ScratchAlloc("a_vmem[2]", 2 * bm * bk * p_a),
+        ScratchAlloc("b_vmem[2]", 2 * bk * bn * p_b),
+        ScratchAlloc("acc_f32", float(bm * bn)),
+    )
+    return KernelAccessPlan(
+        op=op, grid=grid, accesses=accesses, scratch=scratch,
+        dma=double_buffered_schedule(grid[2], n_slots=2, name="a/b k-stream"),
+        note="DMA schedule repeats identically per (i, j) output tile")
+
+
 def matmul_hbm_words(
     a,  # array or ShapeDtypeStruct, (m, k)
     b,  # array or ShapeDtypeStruct, (k, n)

@@ -1,33 +1,36 @@
+import argparse
+import dataclasses
+import json
+import math
 import os
+import time
+import traceback
+from typing import Optional
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as rl
+from repro.configs import ARCH_IDS, SKIPS, get_config
+from repro.launch import specs as sp
 from repro.launch.devices import fake_devices
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as shd
+from repro.models import transformer as T
+from repro.models.config import LM_SHAPES
+from repro.train.optimizer import AdamWConfig, AdamWState
+from repro.train.trainer import TrainConfig, make_train_step
 
-fake_devices(int(os.environ.get("REPRO_DRYRUN_DEVICES", "512")))
-# ^ MUST precede the jax backend init below: jax locks the device count on
-# first init (fake_devices raises a clear error if something beat us to it).
 
-import argparse  # noqa: E402
-import dataclasses  # noqa: E402
-import json  # noqa: E402
-import math  # noqa: E402
-import time  # noqa: E402
-import traceback  # noqa: E402
-from typing import Optional  # noqa: E402
-
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
-
-from repro.analysis import roofline as rl  # noqa: E402
-from repro.configs import ARCH_IDS, SKIPS, get_config  # noqa: E402
-from repro.launch import specs as sp  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.models import sharding as shd  # noqa: E402
-from repro.models import transformer as T  # noqa: E402
-from repro.models.config import LM_SHAPES  # noqa: E402
-from repro.train.optimizer import AdamWConfig, AdamWState  # noqa: E402
-from repro.train.trainer import TrainConfig, make_train_step  # noqa: E402
+def ensure_dryrun_devices() -> int:
+    """Request the dry-run fake-device count (``REPRO_DRYRUN_DEVICES``,
+    default 512) through ``launch.fake_devices``. Called on the driver paths
+    that build their own production mesh — not at import, so importing this
+    module no longer mutates ``XLA_FLAGS`` or locks the jax device count for
+    embedding processes (tests pass an explicit ``mesh=`` instead)."""
+    return fake_devices(int(os.environ.get("REPRO_DRYRUN_DEVICES", "512")))
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
@@ -257,6 +260,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         return _extrapolate_cell(arch, shape_name, multi_pod, save, verbose,
                                  mesh, variant, ov)
     if mesh is None:
+        ensure_dryrun_devices()
         mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
     chips = mesh.devices.size
@@ -358,6 +362,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
 
 def main():
+    ensure_dryrun_devices()
     ap = argparse.ArgumentParser(description="multi-pod dry-run")
     ap.add_argument("--arch", default=None, help="arch id (default: all)")
     ap.add_argument("--shape", default=None, help="shape cell (default: all)")

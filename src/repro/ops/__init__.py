@@ -27,8 +27,8 @@ HardwareTarget (precision policy + plan cache handle), an optional backend
 override, and the Pallas interpret flag — it supersedes the ``use_pallas``
 booleans that used to thread through the model stack (the last shim,
 ``kernels/ops.py``, is gone). Backend selection from the environment:
-``REPRO_BACKEND=xla|pallas|im2col`` (``REPRO_USE_PALLAS=1`` still honored,
-deprecated).
+``REPRO_BACKEND=xla|pallas|im2col`` — the only environment knob (the PR-3
+``REPRO_USE_PALLAS`` variable is retired and now ignored).
 
 Instrumented entries also declare a measured-words counter: every conv and
 matmul ``DispatchDecision`` reports the words its launch geometry moves next
@@ -42,7 +42,6 @@ the shard-local kernel).
 
 from .context import (  # noqa: F401
     BACKEND_ENV,
-    LEGACY_BACKEND_ENV,
     ExecutionContext,
     default_context,
     dtype_for_words,

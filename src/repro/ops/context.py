@@ -20,15 +20,14 @@ Plans are resolved through the process-wide memoized cache in
 consumer of one context converges on identical ``ExecutionPlan`` objects.
 
 Backend resolution order: explicit ``ctx.backend`` > ``REPRO_BACKEND`` env var
-> the target default. The retired ``REPRO_USE_PALLAS=1`` env var is still
-honored with a ``DeprecationWarning``.
+> the target default. (The PR-3 ``REPRO_USE_PALLAS`` env var is gone;
+``REPRO_BACKEND`` is the only environment knob.)
 """
 
 from __future__ import annotations
 
 import dataclasses
 import os
-import warnings
 from typing import Optional
 
 import jax.numpy as jnp
@@ -36,7 +35,6 @@ import jax.numpy as jnp
 from repro.plan import HardwareTarget, TPU_V5E
 
 BACKEND_ENV = "REPRO_BACKEND"
-LEGACY_BACKEND_ENV = "REPRO_USE_PALLAS"
 
 # Paper word-widths (units of 32-bit words) -> jnp dtypes. The precision
 # policy of a HardwareTarget speaks words; kernels speak dtypes.
@@ -53,10 +51,7 @@ def dtype_for_words(words: float):
 
 
 def env_backend() -> Optional[str]:
-    """Backend requested via the environment, or None.
-
-    ``REPRO_BACKEND=xla|pallas`` is the supported knob; the retired
-    ``REPRO_USE_PALLAS=0|1`` is honored with a DeprecationWarning."""
+    """Backend requested via ``REPRO_BACKEND=xla|pallas|im2col``, or None."""
     name = os.environ.get(BACKEND_ENV)
     if name:
         name = name.strip().lower()
@@ -65,12 +60,6 @@ def env_backend() -> Optional[str]:
                 f"{BACKEND_ENV}={name!r} is not a known backend "
                 "(expected 'xla', 'pallas', or 'im2col')")
         return name
-    legacy = os.environ.get(LEGACY_BACKEND_ENV)
-    if legacy is not None:
-        warnings.warn(
-            f"{LEGACY_BACKEND_ENV} is deprecated; set {BACKEND_ENV}="
-            "xla|pallas instead", DeprecationWarning, stacklevel=2)
-        return "pallas" if legacy == "1" else "xla"
     return None
 
 
@@ -130,5 +119,5 @@ class ExecutionContext:
 def default_context() -> ExecutionContext:
     """The context used when a consumer passes ``ctx=None``: plans against
     ``TPU_V5E`` (the pre-redesign kernel default) but executes on XLA unless
-    ``REPRO_BACKEND``/``REPRO_USE_PALLAS`` asks for Pallas."""
+    ``REPRO_BACKEND`` asks for Pallas."""
     return ExecutionContext(target=TPU_V5E, backend=env_backend() or "xla")

@@ -48,7 +48,16 @@ class DispatchDecision:
     (32-bit) for single-device ops, *inter-device* words per device for the
     distributed ops — reported via ``bound_ratio`` against the matching
     bound: the plan's Thm 2.1 ``lower_bound``, or the plan's ``parallel``
-    section's Thm 2.2/2.3 bound for ``*_dist`` ops."""
+    section's Thm 2.2/2.3 bound for ``*_dist`` ops.
+
+    ``audited`` is the static auditor's independent word count (set only
+    when dispatch ran with ``audit=True``): ``repro.verify`` abstractly
+    interprets the entry's :class:`KernelAccessPlan` (grid walk over the
+    BlockSpec index maps + manual-DMA halo windows) and raises
+    ``verify.AuditError`` unless it reproduces ``measured_words`` exactly,
+    fits VMEM, stays at/below the recorded bound ratio, and the DMA
+    schedule is hazard-free — so when this field is set it *equals*
+    ``measured_words``."""
 
     op: str
     requested: str
@@ -56,6 +65,7 @@ class DispatchDecision:
     missing: Tuple[str, ...] = ()
     plan: Optional[Any] = None
     measured_words: Optional[float] = None
+    audited: Optional[float] = None
 
     @property
     def fell_back(self) -> bool:
@@ -92,6 +102,8 @@ class DispatchDecision:
             if self.bound_ratio is not None:
                 msg += (f" = {self.bound_ratio:.2f}x the "
                         f"{self.lower_bound:.3e}-word lower bound")
+        if self.audited is not None:
+            msg += " (statically audited)"
         return msg
 
 
@@ -158,15 +170,37 @@ def _attach_plan_and_words(entry: OpEntry, decision: DispatchDecision,
     return decision
 
 
+def _maybe_audit(entry: OpEntry, decision: DispatchDecision,
+                 ctx: ExecutionContext, spec_args: Optional[tuple],
+                 spec_kw: Optional[dict], audit: bool) -> DispatchDecision:
+    """Opt-in static audit: build the entry's KernelAccessPlan, abstractly
+    interpret it, and stamp the audited word count on the decision. Raises
+    ``repro.verify.AuditError`` on any mismatch/violation/hazard. Lazy
+    import keeps the hot dispatch path free of the verify machinery."""
+    if not audit or spec_args is None or entry.access_plan_fn is None:
+        return decision
+    from repro.verify import audit as _audit
+
+    ap = entry.access_plan_fn(ctx, decision.plan, *spec_args,
+                              **(spec_kw or {}))
+    report = _audit.audit_decision(ap, decision, target=ctx.target)
+    if not report.ok:
+        raise _audit.AuditError(report)
+    return dataclasses.replace(decision, audited=report.counted_words)
+
+
 def resolve(op: str, ctx: Optional[ExecutionContext] = None,
             dtype: Optional[str] = None, needs: Tuple[str, ...] = (),
-            spec_args: Optional[tuple] = None, spec_kw: Optional[dict] = None
-            ) -> Tuple[OpEntry, DispatchDecision]:
+            spec_args: Optional[tuple] = None, spec_kw: Optional[dict] = None,
+            audit: bool = False) -> Tuple[OpEntry, DispatchDecision]:
     """Capability-resolve one call; solve the entry's LP plan and measured
-    HBM-word counter if it declares them."""
+    HBM-word counter if it declares them. ``audit=True`` additionally runs
+    the ``repro.verify`` static auditor against the chosen entry's access
+    plan (raising on any mismatch or hazard)."""
     ctx = default_context() if ctx is None else ctx
     entry, decision = _resolve_entry(op, ctx, dtype, tuple(needs))
     decision = _attach_plan_and_words(entry, decision, ctx, spec_args, spec_kw)
+    decision = _maybe_audit(entry, decision, ctx, spec_args, spec_kw, audit)
     for log in _TRACE:
         log.append(decision)
     return entry, decision
@@ -175,15 +209,18 @@ def resolve(op: str, ctx: Optional[ExecutionContext] = None,
 def explain(op: str, ctx: Optional[ExecutionContext] = None,
             dtype: Optional[str] = None, needs: Tuple[str, ...] = (),
             spec_args: Optional[tuple] = None,
-            spec_kw: Optional[dict] = None) -> DispatchDecision:
+            spec_kw: Optional[dict] = None,
+            audit: bool = False) -> DispatchDecision:
     """The decision ``resolve`` would make, without executing anything.
     ``spec_args``/``spec_kw`` mirror ``resolve`` so the reported plan and
     measured words are the ones the dispatched kernel would consume (e.g.
     conv2d needs stride=); ``jax.ShapeDtypeStruct`` spec_args work since
-    only shapes/dtypes are consulted."""
+    only shapes/dtypes are consulted. ``audit=True`` runs the static
+    communication auditor and stamps ``DispatchDecision.audited``."""
     ctx = default_context() if ctx is None else ctx
     entry, decision = _resolve_entry(op, ctx, dtype, tuple(needs))
-    return _attach_plan_and_words(entry, decision, ctx, spec_args, spec_kw)
+    decision = _attach_plan_and_words(entry, decision, ctx, spec_args, spec_kw)
+    return _maybe_audit(entry, decision, ctx, spec_args, spec_kw, audit)
 
 
 # ---------------------------------------------------------------------------
@@ -240,7 +277,8 @@ def conv2d_dist(x, w, stride=(1, 1), blocking=None, mesh=None,
 def conv1d_causal(x, w, ctx: Optional[ExecutionContext] = None):
     """Causal depthwise conv1d (the mamba/xLSTM short convolution)."""
     ctx = default_context() if ctx is None else ctx
-    entry, dec = resolve("conv1d_causal", ctx, dtype=str(x.dtype))
+    entry, dec = resolve("conv1d_causal", ctx, dtype=str(x.dtype),
+                         spec_args=(x, w))
     return entry.fn(ctx, dec.plan, x, w)
 
 

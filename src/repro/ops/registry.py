@@ -46,17 +46,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.conv_model import Precision
-from repro.kernels.conv1d import conv1d_causal as _conv1d_pallas
+from repro.kernels.conv1d import (conv1d_access_plan,
+                                  conv1d_causal as _conv1d_pallas,
+                                  conv1d_hbm_words)
 from repro.kernels.conv2d import (_conv_spec, conv2d as _conv2d_pallas,
-                                  conv2d_hbm_words)
+                                  conv2d_access_plan, conv2d_hbm_words)
 from repro.kernels.flash_attention import (attention_blocks,
                                            attention_hbm_words,
                                            flash_attention as _flash_pallas,
+                                           flash_attention_access_plan,
+                                           paged_decode_access_plan,
                                            paged_decode_attention,
                                            paged_decode_hbm_words)
-from repro.kernels.im2col import conv2d_im2col, im2col_hbm_words
+from repro.kernels.im2col import (conv2d_im2col, im2col_access_plan,
+                                  im2col_hbm_words)
 from repro.kernels.matmul import (_matmul_spec, matmul as _matmul_pallas,
-                                  matmul_hbm_words)
+                                  matmul_access_plan, matmul_hbm_words)
 from repro.kernels import ref
 from repro.plan import AttentionSpec
 
@@ -102,6 +107,13 @@ class OpEntry:
     # (ctx, plan, *spec_args, **spec_kw) -> float. None = not instrumented
     # (XLA entries delegate data movement to the compiler).
     words_fn: Optional[Callable] = None
+    # structured launch metadata for the static auditor: (ctx, plan,
+    # *spec_args, **spec_kw) -> repro.verify.access.KernelAccessPlan. The
+    # auditor abstractly interprets it and must reproduce words_fn exactly;
+    # None = not statically auditable (XLA entries, and conv2d_dist whose
+    # execution is a shard_map program, not one Pallas launch — its
+    # shard-local conv2d entry is audited instead).
+    access_plan_fn: Optional[Callable] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -479,15 +491,75 @@ def _pallas_attention_decode_words(ctx, plan, q, kp, vp, tables, lengths,
                                   p_q=p_io, p_kv=p_kv, p_o=p_io)
 
 
+# -- access plans (repro.verify): the same geometry as the words_fns, as
+# structured data the static auditor can abstractly interpret -----------------
+
+def _pallas_matmul_access(ctx, plan, a, b, out_dtype=None, **kw):
+    return matmul_access_plan(a, b, plan=plan, target=ctx.target,
+                              out_dtype=out_dtype or ctx.acc_dtype)
+
+
+def _pallas_conv2d_access(ctx, plan, x, w, stride=(1, 1), out_dtype=None,
+                          **kw):
+    return conv2d_access_plan(x, w, stride=stride, plan=plan,
+                              target=ctx.target,
+                              out_dtype=out_dtype or ctx.acc_dtype)
+
+
+def _pallas_conv1d_words(ctx, plan, x, w, **kw):
+    return conv1d_hbm_words(x, w, target=ctx.target)
+
+
+def _pallas_conv1d_access(ctx, plan, x, w, **kw):
+    return conv1d_access_plan(x, w, target=ctx.target)
+
+
+def _pallas_attention_access(ctx, plan, q, k, v, **kw):
+    # the static-kernel launch over the GQA-folded view; the dynamic variant
+    # adds only uncounted scalar-prefetch operands (see the builder docstring)
+    B, H, Lq, Dh = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    p_io = jnp.dtype(q.dtype).itemsize / 4.0
+    p_kv = jnp.dtype(k.dtype).itemsize / 4.0
+    bq, bk = attention_blocks(Dh, ctx.target, kv_word=p_kv)
+    return flash_attention_access_plan(B * Hkv, g * Lq, Lk, Dh, bq, bk,
+                                       p_q=p_io, p_kv=p_kv, p_o=p_io)
+
+
+def _pallas_attention_decode_access(ctx, plan, q, kp, vp, tables, lengths,
+                                    **kw):
+    B, H, _, hd = q.shape
+    KV, bs = kp.shape[1], kp.shape[2]
+    p_io = jnp.dtype(q.dtype).itemsize / 4.0
+    p_kv = jnp.dtype(kp.dtype).itemsize / 4.0
+    # concrete table values are used when available (explain() passes
+    # ShapeDtypeStructs and jit passes tracers; the builder then synthesizes
+    # an all-distinct table, the allocator's normal traffic-maximal case)
+    try:
+        t_np = np.asarray(tables, dtype=np.int64)
+        if t_np.ndim != 2:
+            t_np = None
+    except Exception:
+        t_np = None
+    return paged_decode_access_plan(
+        B, KV, H // KV, tables.shape[1], bs, hd, num_blocks=kp.shape[0],
+        p_q=p_io, p_kv=p_kv, p_o=p_io, tables=t_np)
+
+
 register_backend(Backend(
     name="pallas",
     fallback="xla",
     ops={
         "matmul": OpEntry(_pallas_matmul, spec_fn=_matmul_plan_spec,
-                          words_fn=_pallas_matmul_words),
+                          words_fn=_pallas_matmul_words,
+                          access_plan_fn=_pallas_matmul_access),
         "conv2d": OpEntry(_pallas_conv2d, spec_fn=_conv2d_plan_spec,
-                          words_fn=_pallas_conv2d_words),
-        "conv1d_causal": OpEntry(_pallas_conv1d),
+                          words_fn=_pallas_conv2d_words,
+                          access_plan_fn=_pallas_conv2d_access),
+        "conv1d_causal": OpEntry(_pallas_conv1d,
+                                 words_fn=_pallas_conv1d_words,
+                                 access_plan_fn=_pallas_conv1d_access),
         # flash kernel: dynamic (traced scalar or per-row) q_offset rides the
         # scalar-prefetch path; only key_mask still falls back to masked xla
         # (padded batched prefill), so the decode hot path never leaves pallas.
@@ -496,11 +568,13 @@ register_backend(Backend(
             OpCapabilities(flags=frozenset({"dynamic_q_offset",
                                             "per_row_q_offset"})),
             spec_fn=_attention_plan_spec,
-            words_fn=_pallas_attention_words),
+            words_fn=_pallas_attention_words,
+            access_plan_fn=_pallas_attention_access),
         "attention_decode": OpEntry(
             _pallas_attention_decode,
             spec_fn=_attention_decode_plan_spec,
-            words_fn=_pallas_attention_decode_words),
+            words_fn=_pallas_attention_decode_words,
+            access_plan_fn=_pallas_attention_decode_access),
         "conv2d_dist": OpEntry(_dist_entry("pallas"),
                                spec_fn=_conv2d_plan_spec,
                                words_fn=_conv2d_dist_words),
@@ -529,6 +603,12 @@ def _im2col_conv2d_words(ctx, plan, x, w, stride=(1, 1), out_dtype=None,
                             out_dtype=out_dtype or ctx.acc_dtype)
 
 
+def _im2col_conv2d_access(ctx, plan, x, w, stride=(1, 1), out_dtype=None,
+                          **kw):
+    return im2col_access_plan(x, w, stride=stride, target=ctx.target,
+                              out_dtype=out_dtype or ctx.acc_dtype)
+
+
 register_backend(Backend(
     name="im2col",
     fallback="xla",
@@ -537,6 +617,7 @@ register_backend(Backend(
         # decision reports the identical Thm 2.1 lower bound; the GEMM's own
         # matmul plan is solved inside the kernel (memoized process-wide).
         "conv2d": OpEntry(_im2col_conv2d, spec_fn=_conv2d_plan_spec,
-                          words_fn=_im2col_conv2d_words),
+                          words_fn=_im2col_conv2d_words,
+                          access_plan_fn=_im2col_conv2d_access),
     },
 ))

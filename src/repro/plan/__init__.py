@@ -34,6 +34,7 @@ from .planner import (  # noqa: F401
     load_plan_cache,
     plan,
     plan_cache_size,
+    register_plan_audit_hook,
     resolve_kernel_plan,
     save_plan_cache,
 )

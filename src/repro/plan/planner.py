@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import threading
-from typing import Any, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.bounds import (attention_bound, combined_parallel_bound,
                                single_processor_bound)
@@ -340,6 +340,42 @@ def _parallel_section(shape: ConvShape, P: int, M_eff: float
         lower_bound=combined_parallel_bound(shape, P, M_eff))
 
 
+def _fit_matmul_tiles(tiles: Tuple[int, int, int], prec, mem,
+                      target: HardwareTarget) -> Tuple[int, int, int]:
+    """Shrink snapped (bm, bn, bk) until the GEMM tile footprint
+    ``bm*bk*p_I + bk*bn*p_F + bm*bn*p_O`` fits the double-buffered budget
+    ``mem.M_eff`` (the constraint ``optimize_blocking`` solved under, which
+    alignment snapping can violate). Alignment floors are respected."""
+    bm, bn, bk = tiles
+    aligns = (max(target.align_sublane, 1), max(target.align_lane, 1),
+              max(target.align_lane, 1))
+
+    def fp(t):
+        return (t[0] * t[2] * prec.p_I + t[2] * t[1] * prec.p_F
+                + t[0] * t[1] * prec.p_O)
+
+    def shrink(v, al):
+        nv = (v // 2 // al) * al if v // 2 >= al else min(v, al)
+        return max(nv, 1)
+
+    b = [bm, bn, bk]
+    while fp(b) > mem.M_eff:
+        best_i, best_gain = None, 0.0
+        for i, al in enumerate(aligns):
+            nv = shrink(b[i], al)
+            if nv >= b[i]:
+                continue
+            trial = list(b)
+            trial[i] = nv
+            gain = fp(b) - fp(trial)
+            if gain > best_gain:
+                best_i, best_gain = i, gain
+        if best_i is None:
+            break  # nothing left to shrink; keep the least-bad tiles
+        b[best_i] = shrink(b[best_i], aligns[best_i])
+    return b[0], b[1], b[2]
+
+
 def _plan_matmul(op: MatmulSpec, target: HardwareTarget) -> ExecutionPlan:
     prec = op.prec or target.precision
     mem = target.memory_model()
@@ -355,6 +391,13 @@ def _plan_matmul(op: MatmulSpec, target: HardwareTarget) -> ExecutionPlan:
     bm = min(bm, round_up(op.m, max(target.align_sublane, 1)))
     bn = min(bn, round_up(op.n, max(target.align_lane, 1)))
     bk = min(bk, round_up(op.k, max(target.align_lane, 1)))
+    # MXU alignment can inflate a tile past the LP's feasible point (e.g. the
+    # lane snap turns b_k = 1 into 128 on tall-skinny im2col GEMMs), silently
+    # breaking the double-buffered capacity discipline the kernel allocates
+    # under — caught by the repro.verify static auditor. Re-fit like
+    # fit_conv_kernel_tiles: halve the best-gain axis (alignment floors kept)
+    # until the A + B + accumulator footprint obeys M_eff again.
+    bm, bn, bk = _fit_matmul_tiles((bm, bn, bk), prec, mem, target)
     tiles = (bm, bn, bk)
     grid = (ceil_div(op.m, bm), ceil_div(op.n, bn), ceil_div(op.k, bk))
     shape = op.to_shape(target.precision)
@@ -434,6 +477,18 @@ def resolve_kernel_plan(
     return (tiles if tiles is not None else plan.tiles), interpret
 
 
+_PLAN_AUDIT_HOOKS: List[Callable[[ExecutionPlan], None]] = []
+
+
+def register_plan_audit_hook(fn: Callable[[ExecutionPlan], None]) -> None:
+    """Register ``fn`` to be called on every freshly built ExecutionPlan
+    (cache hits skip it — the cached object already passed). Hooks raise to
+    reject a plan; ``repro.verify.audit.install_plan_audit`` uses this to
+    run the static plan validator at construction time. Idempotent."""
+    if fn not in _PLAN_AUDIT_HOOKS:
+        _PLAN_AUDIT_HOOKS.append(fn)
+
+
 def plan(op: Union[OpSpec, ConvShape], target: HardwareTarget = TPU_V5E
          ) -> ExecutionPlan:
     """Plan one op for one target. Memoized: repeated calls with an equal
@@ -450,6 +505,8 @@ def plan(op: Union[OpSpec, ConvShape], target: HardwareTarget = TPU_V5E
         built = _plan_attention(op, target)
     else:
         built = _plan_matmul(op, target)
+    for hook in _PLAN_AUDIT_HOOKS:
+        hook(built)
     with _CACHE_LOCK:
         while len(_CACHE) >= PLAN_CACHE_MAX:
             _CACHE.pop(next(iter(_CACHE)))  # FIFO eviction of the oldest plan

@@ -1,0 +1,40 @@
+"""``repro.verify`` — static communication auditor, DMA-hazard detector, lint.
+
+No device required: the auditor abstractly interprets each registered Pallas
+kernel's launch (grid + BlockSpec index maps + manual-DMA halo windows) and
+computes the exact HBM words it moves, which must reproduce the op's
+``words_fn`` to the last word; the hazard detector simulates double-buffered
+copy schedules against wait/reuse/overlap rules; the lint walks the source
+tree for structural invariants (``python -m repro.verify.lint``).
+
+Entry points:
+
+    from repro import verify
+    report = verify.audit_decision(access_plan, decision)   # one dispatch
+    verify.install_plan_audit()       # validate every freshly built plan
+    scripts/verify.py                 # the full registered-op sweep + mutants
+"""
+
+from .access import (  # noqa: F401
+    BlockAccess,
+    FlatAccess,
+    KernelAccessPlan,
+    ScratchAlloc,
+    WindowAccess,
+)
+from .audit import (  # noqa: F401
+    AuditError,
+    AuditReport,
+    PlanAuditError,
+    audit_access_plan,
+    audit_decision,
+    install_plan_audit,
+    validate_execution_plan,
+)
+from .hazards import (  # noqa: F401
+    DmaEvent,
+    DmaSchedule,
+    Hazard,
+    check_schedule,
+    double_buffered_schedule,
+)

@@ -1,0 +1,191 @@
+"""``repro.verify.lint`` — structural invariants over the source tree and
+the op registry. Stdlib-only (``ast`` + ``inspect``); run as
+
+    PYTHONPATH=src python -m repro.verify.lint [root ...]
+
+and exits 1 on any violation. CI runs it alongside ruff.
+
+Source rules (AST, so prose in comments/docstrings never trips them):
+
+  VRF001  ``pl.pallas_call`` outside ``kernels/`` — every launch lives in the
+          kernel layer, where it carries a words_fn + access plan.
+  VRF002  ``make_async_copy`` outside ``kernels/`` — manual DMA without an
+          auditable schedule.
+  VRF003  ``jnp.repeat`` on a KV-named tensor outside ``kernels/`` — the old
+          GQA wrapper materialized repeated K/V in HBM (g x the traffic);
+          the dispatch layer keeps heads factored. (``kernels/ref.py``'s
+          repeat is the XLA reference semantics, hence the kernels/ scope.)
+
+Registry rules (imported live, so they track what's actually registered):
+
+  VRF010  every op entry of an instrumented backend (one with a fallback,
+          i.e. not the terminal xla tier that delegates data movement to the
+          compiler) declares a ``words_fn``.
+  VRF011  every ``words_fn`` entry also declares an ``access_plan_fn`` so
+          the static auditor can cross-check it — except the ``*_dist`` ops,
+          whose execution is a shard_map program, not one Pallas launch.
+  VRF012  declared capability flags match the entry fn's signature (e.g. a
+          ``per_row_q_offset`` flag on an fn with no ``q_offset`` parameter
+          would dispatch calls the kernel cannot honor).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import inspect
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+# tensors whose repeat re-materializes a KV cache (VRF003)
+_KV_NAMES = frozenset({
+    "k", "v", "kp", "vp", "kk", "vv", "key", "value", "keys", "values",
+    "k_cache", "v_cache", "k_pool", "v_pool", "k_pages", "v_pages",
+})
+
+# capability flag -> parameter the entry fn must accept (VRF012)
+_FLAG_PARAMS = {
+    "dynamic_q_offset": "q_offset",
+    "per_row_q_offset": "q_offset",
+    "key_mask": "key_mask",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    code: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _terminal_name(node: ast.AST) -> Optional[str]:
+    """`x` -> "x", `a.b.kv` -> "kv"; None for anything else."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, path: Path, rel: str, in_kernels: bool):
+        self.rel = rel
+        self.in_kernels = in_kernels
+        self.found: List[Violation] = []
+
+    def visit_Call(self, node: ast.Call) -> None:
+        callee = _terminal_name(node.func)
+        if not self.in_kernels:
+            if callee == "pallas_call":
+                self.found.append(Violation(
+                    "VRF001", self.rel, node.lineno,
+                    "pl.pallas_call outside kernels/ (uninstrumented launch)"))
+            elif callee == "make_async_copy":
+                self.found.append(Violation(
+                    "VRF002", self.rel, node.lineno,
+                    "make_async_copy outside kernels/ (unaudited manual DMA)"))
+            elif callee == "repeat" and node.args:
+                arg = _terminal_name(node.args[0])
+                if arg in _KV_NAMES:
+                    self.found.append(Violation(
+                        "VRF003", self.rel, node.lineno,
+                        f"jnp.repeat on KV tensor {arg!r} re-materializes "
+                        "the cache (keep GQA heads factored)"))
+        self.generic_visit(node)
+
+
+def lint_file(path: Path, repo_root: Path) -> List[Violation]:
+    rel = str(path.relative_to(repo_root)) if path.is_relative_to(repo_root) \
+        else str(path)
+    try:
+        tree = ast.parse(path.read_text(), filename=rel)
+    except SyntaxError as e:  # pragma: no cover - broken file
+        return [Violation("VRF000", rel, e.lineno or 0, f"syntax error: {e.msg}")]
+    checker = _Checker(path, rel, in_kernels="kernels" in path.parts)
+    checker.visit(tree)
+    return checker.found
+
+
+def lint_sources(roots: Sequence[Path], repo_root: Path) -> List[Violation]:
+    out: List[Violation] = []
+    for root in roots:
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            out.extend(lint_file(f, repo_root))
+    return out
+
+
+def _accepts(fn, param: str) -> bool:
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):  # pragma: no cover - builtins
+        return True
+    if param in sig.parameters:
+        return True
+    return any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in sig.parameters.values())
+
+
+def lint_registry() -> List[Violation]:
+    """Live checks over the imported op registry (VRF010-VRF012)."""
+    from repro.ops import registry
+
+    out: List[Violation] = []
+    for bname in registry.backends():
+        backend = registry.get_backend(bname)
+        instrumented_tier = backend.fallback is not None
+        for op, entry in sorted(backend.ops.items()):
+            where = f"{bname}.{op}"
+            if instrumented_tier and entry.words_fn is None:
+                out.append(Violation(
+                    "VRF010", "repro/ops/registry.py", 0,
+                    f"{where}: instrumented backend entry has no words_fn"))
+            if (entry.words_fn is not None and entry.access_plan_fn is None
+                    and not op.endswith("_dist")):
+                out.append(Violation(
+                    "VRF011", "repro/ops/registry.py", 0,
+                    f"{where}: words_fn without access_plan_fn — the static "
+                    "auditor cannot cross-check it"))
+            for flag in sorted(entry.caps.flags):
+                param = _FLAG_PARAMS.get(flag)
+                if param and not _accepts(entry.fn, param):
+                    out.append(Violation(
+                        "VRF012", "repro/ops/registry.py", 0,
+                        f"{where}: declares capability {flag!r} but its fn "
+                        f"accepts no {param!r} parameter"))
+    return out
+
+
+def default_roots(repo_root: Path) -> List[Path]:
+    return [p for p in (repo_root / "src" / "repro", repo_root / "scripts")
+            if p.exists()]
+
+
+def run_lint(roots: Optional[Sequence[Path]] = None,
+             repo_root: Optional[Path] = None) -> List[Violation]:
+    repo_root = repo_root or Path(__file__).resolve().parents[3]
+    roots = list(roots) if roots else default_roots(repo_root)
+    return lint_sources(roots, repo_root) + lint_registry()
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    repo_root = Path(__file__).resolve().parents[3]
+    roots = [Path(a).resolve() for a in argv] or None
+    found = run_lint(roots, repo_root)
+    for viol in found:
+        print(viol)
+    if found:
+        print(f"repro.verify.lint: {len(found)} violation(s)")
+        return 1
+    print("repro.verify.lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,95 @@
+"""Seeded mutants — the auditor's own regression harness.
+
+Each mutant injects a realistic kernel bug into otherwise-correct launch
+metadata and asserts the static checks catch it:
+
+  * ``halo_off_by_one``   shifts the conv2d input halo window's h start by
+    one row — the classic stride/halo index-map bug. The word *totals* are
+    unchanged, so only the ``requires``-coverage check can see it.
+  * ``dropped_dma_wait``  removes the WAIT events from the double-buffered
+    schedule — the kernel would read stale VMEM (H1).
+  * ``same_slot_prefetch`` prefetches step ci+1 into the slot step ci is
+    about to consume — the overlap bug double buffering exists to prevent
+    (H2/H3).
+
+``run_seeded_mutants()`` returns ``(name, caught, detail)`` triples;
+``scripts/verify.py --mutants`` (and the CI verify job) fail unless every
+mutant is caught.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import audit as _audit
+from . import hazards as hz
+from .access import KernelAccessPlan, WindowAccess
+
+
+def _conv2d_plan() -> KernelAccessPlan:
+    """A representative strided conv2d access plan (ResNet conv3_1-like)."""
+    from repro.kernels.conv2d import conv2d_access_plan
+
+    x = jax.ShapeDtypeStruct((8, 64, 56, 56), jnp.bfloat16)
+    w = jax.ShapeDtypeStruct((128, 64, 3, 3), jnp.bfloat16)
+    return conv2d_access_plan(x, w, stride=(2, 2))
+
+
+def halo_off_by_one() -> Tuple[bool, str]:
+    """Shift the input halo window one row down; words stay identical."""
+    ap = _conv2d_plan()
+    mutated = []
+    for acc in ap.accesses:
+        if isinstance(acc, WindowAccess) and acc.name == "input":
+            orig = acc.window
+
+            def shifted(*axes, _orig=orig):
+                win = list(_orig(*axes))
+                (h0, hs) = win[2]
+                win[2] = (h0 + 1, hs)  # off-by-one h start
+                return tuple(win)
+
+            acc = dataclasses.replace(acc, window=shifted)
+        mutated.append(acc)
+    report = _audit.audit_access_plan(
+        dataclasses.replace(ap, accesses=tuple(mutated)))
+    caught = any("misses the required" in p or "exceeds the padded extent" in p
+                 for p in report.problems)
+    return caught, "; ".join(report.problems[:2]) or "not detected"
+
+
+def dropped_dma_wait() -> Tuple[bool, str]:
+    """Strip the WAIT events: compute reads data the DMA never landed."""
+    sched = hz.double_buffered_schedule(6, name="mutant:no-wait")
+    mutated = dataclasses.replace(
+        sched, events=tuple(e for e in sched.events if e.kind != hz.WAIT))
+    found = hz.check_schedule(mutated)
+    caught = any(h.code == "H1" for h in found)
+    return caught, "; ".join(str(h) for h in found[:2]) or "not detected"
+
+
+def same_slot_prefetch() -> Tuple[bool, str]:
+    """Prefetch ci+1 into the slot step ci still consumes (n_slots=1 bug)."""
+    sched = hz.double_buffered_schedule(6, name="mutant:same-slot")
+    mutated = dataclasses.replace(
+        sched, events=tuple(
+            dataclasses.replace(e, slot=0) if e.kind == hz.START else e
+            for e in sched.events))
+    found = hz.check_schedule(mutated)
+    caught = any(h.code in ("H2", "H3") for h in found)
+    return caught, "; ".join(str(h) for h in found[:2]) or "not detected"
+
+
+MUTANTS: Tuple[Tuple[str, Callable[[], Tuple[bool, str]]], ...] = (
+    ("halo_off_by_one", halo_off_by_one),
+    ("dropped_dma_wait", dropped_dma_wait),
+    ("same_slot_prefetch", same_slot_prefetch),
+)
+
+
+def run_seeded_mutants() -> List[Tuple[str, bool, str]]:
+    return [(name, *fn()) for name, fn in MUTANTS]

@@ -275,7 +275,6 @@ def test_record_dispatch_captures_measured_words():
 
 def test_backend_resolution_order(monkeypatch):
     monkeypatch.delenv(ops.BACKEND_ENV, raising=False)
-    monkeypatch.delenv(ops.LEGACY_BACKEND_ENV, raising=False)
     # target default
     assert ops.ExecutionContext(target=TPU_V5E).resolved_backend() == "pallas"
     assert ops.ExecutionContext(target=CPU_INTERPRET).resolved_backend() == "xla"
@@ -291,15 +290,15 @@ def test_backend_resolution_order(monkeypatch):
         ops.ExecutionContext().resolved_backend()
 
 
-def test_legacy_env_var_honored_with_deprecation(monkeypatch):
+def test_legacy_env_var_retired(monkeypatch):
+    # the PR-3 REPRO_USE_PALLAS shim is gone: the name is no longer exported
+    # and setting the variable changes nothing
     monkeypatch.delenv(ops.BACKEND_ENV, raising=False)
-    monkeypatch.setenv(ops.LEGACY_BACKEND_ENV, "1")
-    with pytest.warns(DeprecationWarning, match="REPRO_USE_PALLAS"):
-        assert ops.env_backend() == "pallas"
-    monkeypatch.setenv(ops.BACKEND_ENV, "xla")  # new var wins, no warning
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    assert not hasattr(ops, "LEGACY_BACKEND_ENV")
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        assert ops.env_backend() == "xla"
+        assert ops.env_backend() is None
 
 
 def test_resolved_pins_backend(monkeypatch):

@@ -13,9 +13,10 @@ from repro.core.conv_model import INT8_ACC32, Precision, resnet50_layers
 from repro.kernels.conv2d import conv2d
 from repro.kernels.matmul import matmul
 from repro.kernels.ref import conv2d_ref, matmul_ref
-from repro.plan import (CPU_INTERPRET, GEMMINI, TPU_V5E, ConvSpec,
-                        ExecutionPlan, HardwareTarget, MatmulSpec, get_target,
-                        load_plan_cache, plan, save_plan_cache)
+from repro.plan import (CPU_INTERPRET, GEMMINI, PLAN_FORMAT_VERSION, TPU_V5E,
+                        AttentionSpec, ConvSpec, ExecutionPlan, HardwareTarget,
+                        MatmulSpec, get_target, load_plan_cache, plan,
+                        save_plan_cache)
 
 KEY = jax.random.PRNGKey(0)
 K2 = jax.random.PRNGKey(1)
@@ -79,6 +80,54 @@ def test_v1_conv_plan_json_upgrades():
     assert len(back.grid) == 5
     assert back.kernel_footprints()["output"] > 0
     back.pallas_specs()
+
+
+def test_plan_json_upgrade_chain_v1_to_v4():
+    """Walk one conv dump through every historical format. v1 (3-tuple tiles,
+    3-axis grid, no ``parallel``), v2 (spatial tiles, still no ``parallel``),
+    v3 (``parallel`` present), and current v4 fixtures must all load, and
+    each upgraded plan must agree with the live plan on everything its era
+    recorded."""
+    meshed = TPU_V5E.with_mesh((("data", 4), ("model", 2)))
+    ep = plan(CONV, meshed)
+    v4 = ep.to_dict()
+    assert v4["version"] == PLAN_FORMAT_VERSION == 4
+    assert v4["parallel"] is not None
+
+    # v3 conv dumps are layout-identical to v4 (v4 only added attention).
+    v3 = dict(v4, version=3)
+    # v2 predates the parallel section entirely — the key is absent.
+    v2 = {k: v for k, v in v4.items() if k != "parallel"}
+    v2["version"] = 2
+    # v1 additionally predates spatial tiling: 3-tuple tiles, 3-axis grid.
+    v1 = dict(v2, version=1, tiles=v4["tiles"][:3],
+              grid=[v4["grid"][0], v4["grid"][1], v4["grid"][4]])
+
+    assert ExecutionPlan.from_dict(v4) == ep
+    assert ExecutionPlan.from_dict(v3) == ep
+    assert ExecutionPlan.from_dict(v2) == dataclasses.replace(ep, parallel=None)
+
+    from_v1 = ExecutionPlan.from_dict(v1)
+    assert from_v1.parallel is None
+    assert from_v1.tiles == tuple(v4["tiles"][:3]) + (CONV.h_O, CONV.w_O)
+    assert from_v1.grid == (v4["grid"][0], v4["grid"][1], 1, 1, v4["grid"][4])
+    assert from_v1.sharding == ep.sharding
+
+    for back in (from_v1, ExecutionPlan.from_dict(v2),
+                 ExecutionPlan.from_dict(v3)):
+        assert back.op == ep.op and back.target == ep.target
+        assert back.lower_bound == ep.lower_bound
+        assert back.kernel_footprints()["output"] > 0
+        back.pallas_specs()
+
+
+def test_attention_plan_v4_roundtrip_and_future_version_rejected():
+    ep = plan(AttentionSpec(B=2, H=8, KV=8, Lq=128, Lk=128, hd=64), TPU_V5E)
+    back = ExecutionPlan.from_dict(ep.to_dict())
+    assert back == ep and isinstance(back.op, AttentionSpec)
+    bad = dict(ep.to_dict(), version=PLAN_FORMAT_VERSION + 1)
+    with pytest.raises(ValueError, match="newer than"):
+        ExecutionPlan.from_dict(bad)
 
 
 def test_plan_cache_dump_load(tmp_path):
