@@ -1,9 +1,11 @@
 """Static verification sweep: every registered instrumented op, no device.
 
 For each op x shape in the sweep (the five ResNet-50 conv shapes from
-``configs/resnet50_convs.py`` on both conv backends, the GEMM / conv1d /
-attention shapes the tier-1 suite exercises, and the serving decode
-snapshots from ``benchmarks/serving_bench``), dispatch through
+``configs/resnet50_convs.py`` on both conv backends — plus their int8
+``conv2d_q``/``matmul_q`` quantized forms, whose folded scale vector is an
+audited operand of its own — the GEMM / conv1d / attention shapes the
+tier-1 suite exercises, and the serving decode snapshots from
+``benchmarks/serving_bench``), dispatch through
 ``ops.explain(audit=True)``: the ``repro.verify`` auditor abstractly
 interprets the kernel's access plan and the dispatch fails unless the
 audited words reproduce ``words_fn`` exactly, fit VMEM, and the DMA
@@ -83,6 +85,31 @@ def sweep_gemm_conv1d(dtype=jnp.bfloat16):
             f"conv1d_causal/B{B}_L{L}_D{D}_K{K}",
             ops.explain("conv1d_causal", PALLAS, spec_args=(x, w),
                         audit=True)))
+    return rows
+
+
+def sweep_quant():
+    """Quantized int8 conv2d/matmul dispatches, audited like the bf16 sweep.
+    The scale vector is a separately-audited operand here, so these rows
+    also pin the one-shot scale-fetch accounting the ``scale_applied_twice``
+    mutant perturbs."""
+    rows = []
+    for lname, s in RESNET50.items():
+        H = (s.h_O - 1) * s.sh + s.h_F
+        W = (s.w_O - 1) * s.sw + s.w_F
+        xs = jax.ShapeDtypeStruct((s.N, s.c_I, H, W), jnp.int8)
+        ws = jax.ShapeDtypeStruct((s.c_O, s.c_I, s.h_F, s.w_F), jnp.int8)
+        sc = jax.ShapeDtypeStruct((1, s.c_O), jnp.float32)
+        rows.append(_row(f"conv2d_q/{lname}/pallas", ops.explain(
+            "conv2d_q", PALLAS, dtype="int8", spec_args=(xs, ws, sc),
+            spec_kw={"stride": (s.sh, s.sw)}, audit=True)))
+    for m, k, n in ((512, 384, 256), (2048, 2048, 2048)):
+        a = jax.ShapeDtypeStruct((m, k), jnp.int8)
+        b = jax.ShapeDtypeStruct((k, n), jnp.int8)
+        sc = jax.ShapeDtypeStruct((1, n), jnp.float32)
+        rows.append(_row(f"matmul_q/{m}x{k}x{n}", ops.explain(
+            "matmul_q", PALLAS, dtype="int8", spec_args=(a, b, sc),
+            audit=True)))
     return rows
 
 
@@ -170,6 +197,7 @@ def main(argv=None) -> int:
     try:
         rows += sweep_convs()
         rows += sweep_gemm_conv1d()
+        rows += sweep_quant()
         rows += sweep_attention()
     except Exception as e:
         print(f"verify: FAILED — {e}")

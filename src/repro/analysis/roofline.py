@@ -28,9 +28,35 @@ ICI_BW = 50e9  # bytes/s per link
 WORD_BYTES = 4
 
 
-def words_to_bytes(words: float) -> float:
-    """32-bit words (the paper's and ``repro.verify``'s unit) -> bytes."""
-    return float(words) * WORD_BYTES
+def words_to_bytes(words, dtypes=None):
+    """32-bit words (the paper's and ``repro.verify``'s unit) -> bytes.
+
+    Scalar form (``dtypes`` omitted): ``words`` is a dtype-weighted word
+    count — every ``words_fn`` and static-audit total is already priced in
+    32-bit words, so bytes are a flat ``words * 4``.
+
+    Per-operand form: ``words`` is a mapping operand -> ELEMENT count and
+    ``dtypes`` the plan's per-operand dtype map (``ExecutionPlan.dtypes``
+    pairs, or a dict) as carried by plan format v5. Each operand converts at
+    its own storage width — an int8 input stream moves 1 byte per element
+    where the f32 view would charge 4 — and a dict of per-operand bytes
+    comes back. Operands absent from the map price as float32.
+    """
+    if dtypes is None:
+        return float(words) * WORD_BYTES
+    from repro.quant.spec import dtype_words
+    dmap = dict(dtypes)
+    out = {}
+    for operand, elems in words.items():
+        dt = dmap.get(operand, "float32")
+        try:
+            w = dtype_words(dt)
+        except ValueError:
+            w = 1.0  # "words:<x>" placeholders from exotic plan widths
+            if dt.startswith("words:"):
+                w = float(dt.split(":", 1)[1])
+        out[operand] = float(elems) * w * WORD_BYTES
+    return out
 
 
 def hbm_seconds(words: float, chips: int = 1) -> float:

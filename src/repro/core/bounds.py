@@ -158,3 +158,49 @@ def matmul_bound(m: int, n: int, k: int, M: float, prec: Precision = Precision()
     from .conv_model import matmul_as_conv
 
     return single_processor_bound(matmul_as_conv(m, n, k, prec), M).value
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision variants — the same theorems evaluated under a quantized
+# per-operand storage policy (``repro.quant.PrecisionSpec``), so "how much
+# does int8 storage move the bound" is a first-class query.
+# ---------------------------------------------------------------------------
+
+def _as_precision(prec) -> Precision:
+    """Accept a ``Precision`` word-width triple or anything exposing one via
+    a ``.precision`` property (``repro.quant.PrecisionSpec`` — duck-typed to
+    keep ``core`` free of upward imports)."""
+    if isinstance(prec, Precision):
+        return prec
+    p = getattr(prec, "precision", None)
+    if isinstance(p, Precision):
+        return p
+    raise TypeError(f"expected Precision or PrecisionSpec, got {type(prec)!r}")
+
+
+def mixed_precision_bound(shape: ConvShape, M: float, prec) -> BoundTerms:
+    """Thm 2.1 with the shape's operands re-priced at a quantized storage
+    policy's word-widths. Every term moves: the memory-independent term
+    scales linearly per operand, the per-M term through C_p, the
+    small-filter term through sqrt(p_I p_F p_O) — narrower storage lowers
+    the attainable bound itself, not just the array sizes."""
+    return single_processor_bound(shape.with_precision(_as_precision(prec)), M)
+
+
+def mixed_precision_bound_ratio(shape: ConvShape, M: float, prec) -> float:
+    """bound(quantized) / bound(shape's own precision): the factor by which
+    the storage policy moves the Thm 2.1 bound for this shape (e.g. ~0.5 for
+    int8-in/bf16-out vs bf16-in/f32-out in the memory-independent regime)."""
+    base = single_processor_bound(shape, M).value
+    return mixed_precision_bound(shape, M, prec).value / max(base, 1.0)
+
+
+def mixed_precision_attention_bound(B: int, H: int, KV: int, Lq: int,
+                                    Lk: int, hd: int, M: float,
+                                    prec) -> BoundTerms:
+    """:func:`attention_bound` under a quantized KV policy. For the serving
+    decode regime (Lq = 1) the memory-independent term is the pure KV-cache
+    stream at ``p_F`` words per element, so an int8 pool (p_F = 0.25) halves
+    the decode bound relative to bf16 (p_F = 0.5) — the bound-level statement
+    of what the quantized paged pool's doubled block capacity buys."""
+    return attention_bound(B, H, KV, Lq, Lk, hd, M, prec=_as_precision(prec))

@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 from scipy.optimize import linprog
 
-from .conv_model import ConvShape, ceil_div
+from .conv_model import ConvShape, Precision, ceil_div
 
 AXES = ("N", "cI", "cO", "wO", "hO", "q6", "q7", "r6", "r7")
 
@@ -367,12 +367,17 @@ def optimize_blocking(
 # (b_hO - 1) * sh + h_F rather than the lifted (b_hO + b_q7 - 1) * b_r7.
 # ---------------------------------------------------------------------------
 
-def conv_kernel_footprints(shape: ConvShape,
-                           tiles: Sequence[int]) -> Dict[str, float]:
+def conv_kernel_footprints(shape: ConvShape, tiles: Sequence[int],
+                           prec: Optional[Precision] = None
+                           ) -> Dict[str, float]:
     """Words each array block of the spatially-tiled conv2d kernel occupies
-    in fast memory, for kernel tiles ``(bN, b_cI, b_cO, b_hO, b_wO)``."""
+    in fast memory, for kernel tiles ``(bN, b_cI, b_cO, b_hO, b_wO)``.
+    ``prec`` overrides the shape's own word-widths — the byte-weighted view
+    a quantized storage policy (``repro.quant.PrecisionSpec.precision``)
+    prices the same tiles at (int8 streams take a quarter of the VMEM the
+    shape's nominal precision would charge)."""
     bN, b_cI, b_cO, b_hO, b_wO = tiles
-    p = shape.prec
+    p = prec if prec is not None else shape.prec
     h_in = (b_hO - 1) * shape.sh + shape.h_F
     w_in = (b_wO - 1) * shape.sw + shape.w_F
     return {

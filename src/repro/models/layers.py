@@ -157,12 +157,29 @@ def attention_block(
     if block_tables is not None:
         if L != 1:
             raise ValueError(f"paged attention is decode-only (L == 1), got L={L}")
-        kp, vp = cache
+        quantized = len(cache) == 4  # (kp, ks, vp, vs): int8 pool + scales
+        kp, vp = (cache[0], cache[2]) if quantized else cache
         bs = kp.shape[2]
         pos = jnp.broadcast_to(idx, (B,))  # per-row depth = write position
         blk = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
                                   axis=1)[:, 0]  # (B,) physical block
         off = pos % bs
+        if quantized:
+            # per-(row, kv_head) symmetric int8 over hd; the scale rides the
+            # pool's (num_blocks, KV, bs) companion leaves
+            ks, vs = cache[1], cache[3]
+            k_new, ks_new = _quantize_kv_row(k[:, :, 0, :])
+            v_new, vs_new = _quantize_kv_row(v[:, :, 0, :])
+            kp = kp.at[blk, :, off].set(k_new)
+            ks = ks.at[blk, :, off].set(ks_new)
+            vp = vp.at[blk, :, off].set(v_new)
+            vs = vs.at[blk, :, off].set(vs_new)
+            o = ops.attention_decode_quant(q.astype(cd), kp, ks, vp, vs,
+                                           block_tables, pos + 1, ctx=ctx)
+            o = o.transpose(0, 2, 1, 3).reshape(B, L, H * hd)
+            out = jnp.einsum("blh,hd->bld", o,
+                             p["wo"].astype(cd)).astype(x.dtype)
+            return out, (kp, ks, vp, vs)
         kp = kp.at[blk, :, off].set(k[:, :, 0, :].astype(kp.dtype))
         vp = vp.at[blk, :, off].set(v[:, :, 0, :].astype(vp.dtype))
         o = ops.attention_decode(q.astype(cd), kp, vp, block_tables, pos + 1,
@@ -208,6 +225,20 @@ def attention_block(
     o = o.transpose(0, 2, 1, 3).reshape(B, L, H * hd)
     out = jnp.einsum("blh,hd->bld", o, p["wo"].astype(cd)).astype(x.dtype)
     return out, new_cache
+
+
+def _quantize_kv_row(r: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization of one decode step's (B, KV, hd) k or v
+    row, one scale per (row, kv_head) reduced over hd — the granularity the
+    quantized pool's (num_blocks, KV, bs) scale leaves store. All-zero rows
+    get scale 1.0 (quantize to 0) so dequantization never divides by zero."""
+    qmax = 127.0
+    rf = r.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(rf), axis=-1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(rf / scale[..., None]), -qmax,
+                 qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
 
 
 def _expand_key_mask(attn_mask, idx, L: int, Lk: int, cached: bool):

@@ -119,19 +119,34 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16) -> PyTree:
+                     dtype=jnp.bfloat16, quantized: bool = False) -> PyTree:
     """Stacked paged KV pool: every attention layer gets a
     ``(num_blocks, KV, block_size, hd)`` key pool and value pool (stacked to
     (repeats, ...) like ``init_cache``). Physical block 0 is the reserved
     garbage block (``serving.kv.GARBAGE_BLOCK``): dead batch rows point their
     tables at it. Attention-only patterns — recurrent blocks carry O(1)
-    state and gain nothing from paging."""
+    state and gain nothing from paging.
+
+    ``quantized=True`` stores the pools as int8 plus per-(block, kv_head,
+    position) f32 scale leaves ``ks``/``vs`` of shape (num_blocks, KV,
+    block_size) — (0.25 + 1/hd) words per cached element instead of bf16's
+    0.5, which is what roughly doubles ``serving.kv.plan_pool_blocks``'s
+    block capacity from the same HBM budget. Scales initialize to 1.0
+    (matching the all-zero-row convention of ``quantize_symmetric``)."""
     if set(cfg.pattern) != {"attn"}:
         raise ValueError(
             f"paged cache requires a pure-attention pattern, got {cfg.pattern}")
     shape = (num_blocks, cfg.n_kv_heads, block_size, cfg.hd)
-    one = {f"b{i}": {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
-           for i in range(len(cfg.pattern))}
+    if quantized:
+        one = {f"b{i}": {"kp": jnp.zeros(shape, jnp.int8),
+                         "ks": jnp.ones(shape[:3], jnp.float32),
+                         "vp": jnp.zeros(shape, jnp.int8),
+                         "vs": jnp.ones(shape[:3], jnp.float32)}
+               for i in range(len(cfg.pattern))}
+    else:
+        one = {f"b{i}": {"kp": jnp.zeros(shape, dtype),
+                         "vp": jnp.zeros(shape, dtype)}
+               for i in range(len(cfg.pattern))}
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (cfg.repeats,) + a.shape), one)
 
@@ -191,8 +206,11 @@ def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
         bc = unit_cache.get(f"b{i}") if unit_cache is not None else None
         if kind == "attn":
             paged = bc is not None and "kp" in bc
+            quant_paged = paged and "ks" in bc  # int8 pool + scale leaves
             if bc is None:
                 cache = None
+            elif quant_paged:
+                cache = (bc["kp"], bc["ks"], bc["vp"], bc["vs"])
             elif paged:
                 cache = (bc["kp"], bc["vp"])
             elif cfg.fused_kv_cache:
@@ -205,7 +223,10 @@ def _unit_forward(unit_params, x, cfg: ModelConfig, positions, unit_cache,
                                        block_tables=(block_tables if paged
                                                      else None))
             if upd is not None:
-                if paged:
+                if quant_paged:
+                    new_cache[f"b{i}"] = {"kp": upd[0], "ks": upd[1],
+                                          "vp": upd[2], "vs": upd[3]}
+                elif paged:
                     new_cache[f"b{i}"] = {"kp": upd[0], "vp": upd[1]}
                 else:
                     new_cache[f"b{i}"] = ({"kv": upd[0]} if cfg.fused_kv_cache

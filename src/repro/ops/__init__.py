@@ -51,12 +51,15 @@ from .dispatch import (  # noqa: F401
     DispatchDecision,
     attention,
     attention_decode,
+    attention_decode_quant,
     attention_needs,
     conv1d_causal,
     conv2d,
     conv2d_dist,
+    conv2d_q,
     explain,
     matmul,
+    matmul_q,
     record_dispatch,
     resolve,
 )
@@ -70,4 +73,5 @@ from .registry import (  # noqa: F401
     registered_ops,
     xla_attention,
     xla_attention_decode,
+    xla_attention_decode_quant,
 )

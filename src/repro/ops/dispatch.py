@@ -26,6 +26,7 @@ import contextlib
 import dataclasses
 from typing import Any, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from .context import ExecutionContext, default_context
@@ -254,6 +255,36 @@ def conv2d(x, w, stride=(1, 1), ctx: Optional[ExecutionContext] = None,
     return entry.fn(ctx, dec.plan, x, w, stride=stride, out_dtype=out_dtype)
 
 
+def matmul_q(a, b, scale, ctx: Optional[ExecutionContext] = None,
+             out_dtype=None):
+    """Quantized GEMM: ``a``/``b`` int8 (from
+    ``repro.quant.quantize_matmul_operands``), ``scale`` the folded (1, n)
+    f32 per-column dequant scales. Streams stay int8 into VMEM; the f32
+    accumulator is scaled once at the store. ``out_dtype`` defaults to bf16
+    (``repro.quant.INT8_SPEC``), not the context accumulator — the narrower
+    store is half of what moves the measured words."""
+    ctx = default_context() if ctx is None else ctx
+    out_dtype = out_dtype or jnp.bfloat16
+    entry, dec = resolve("matmul_q", ctx, dtype=str(a.dtype),
+                         spec_args=(a, b, scale),
+                         spec_kw={"out_dtype": out_dtype})
+    return entry.fn(ctx, dec.plan, a, b, scale, out_dtype=out_dtype)
+
+
+def conv2d_q(x, w, scale, stride=(1, 1),
+             ctx: Optional[ExecutionContext] = None, out_dtype=None):
+    """Quantized direct conv2d (VALID padding): int8 ``x``/``w`` plus the
+    folded (1, c_O) f32 scale from ``repro.quant.quantize_conv_operands``.
+    ``out_dtype`` defaults to bf16 (see :func:`matmul_q`)."""
+    ctx = default_context() if ctx is None else ctx
+    out_dtype = out_dtype or jnp.bfloat16
+    entry, dec = resolve("conv2d_q", ctx, dtype=str(x.dtype),
+                         spec_args=(x, w, scale),
+                         spec_kw={"stride": stride, "out_dtype": out_dtype})
+    return entry.fn(ctx, dec.plan, x, w, scale, stride=stride,
+                    out_dtype=out_dtype)
+
+
 def conv2d_dist(x, w, stride=(1, 1), blocking=None, mesh=None,
                 ctx: Optional[ExecutionContext] = None, out_dtype=None):
     """Distributed halo-exchange conv2d over a device mesh (paper §4.2).
@@ -326,3 +357,20 @@ def attention_decode(q, kp, vp, tables, lengths,
     entry, dec = resolve("attention_decode", ctx, dtype=str(q.dtype),
                          spec_args=(q, kp, vp, tables, lengths))
     return entry.fn(ctx, dec.plan, q, kp, vp, tables, lengths)
+
+
+def attention_decode_quant(q, kp, ks, vp, vs, tables, lengths,
+                           ctx: Optional[ExecutionContext] = None):
+    """One paged decode step against an int8-quantized KV pool.
+
+    ``kp``/``vp`` are the (num_blocks, KV, block_size, hd) int8 pools and
+    ``ks``/``vs`` their (num_blocks, KV, block_size) f32 per-(block, head,
+    position) scales (written together by the engine's quantizing insert).
+    Registered on the xla backend only — any requested backend reaches it
+    through the fallback chain — since the interesting quantity here is the
+    *pool's* halved stream width (the plan's p_F ~ 0.25 + 1/hd), not the
+    gather kernel."""
+    ctx = default_context() if ctx is None else ctx
+    entry, dec = resolve("attention_decode_quant", ctx, dtype=str(q.dtype),
+                         spec_args=(q, kp, ks, vp, vs, tables, lengths))
+    return entry.fn(ctx, dec.plan, q, kp, ks, vp, vs, tables, lengths)

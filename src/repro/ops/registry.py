@@ -62,6 +62,11 @@ from repro.kernels.im2col import (conv2d_im2col, im2col_access_plan,
                                   im2col_hbm_words)
 from repro.kernels.matmul import (_matmul_spec, matmul as _matmul_pallas,
                                   matmul_access_plan, matmul_hbm_words)
+from repro.kernels.quant import (_conv_spec_q, _matmul_spec_q,
+                                 conv2d_q as _conv2d_q_pallas,
+                                 conv2d_q_access_plan, conv2d_q_hbm_words,
+                                 matmul_q as _matmul_q_pallas,
+                                 matmul_q_access_plan, matmul_q_hbm_words)
 from repro.kernels import ref
 from repro.plan import AttentionSpec
 
@@ -79,10 +84,13 @@ class OpCapabilities:
     """What one backend's op entry can serve.
 
     ``dtypes`` is the accepted input dtypes ("*" = anything); ``flags`` the
-    supported optional call features."""
+    supported optional call features. Entries accepting narrow storage
+    (int8/fp8 streams) must declare ``accum_dtype`` — the in-kernel
+    accumulation dtype, f32 or wider (lint rule VRF013)."""
 
     dtypes: Tuple[str, ...] = ("float32", "bfloat16")
     flags: FrozenSet[str] = frozenset()
+    accum_dtype: Optional[str] = None
 
     def missing(self, dtype: Optional[str] = None,
                 needs: Tuple[str, ...] = ()) -> Tuple[str, ...]:
@@ -246,6 +254,41 @@ def _xla_attention_decode_entry(ctx, plan, q, kp, vp, tables, lengths):
     return xla_attention_decode(q, kp, vp, tables, lengths)
 
 
+# -- quantized references: integer-exact math in f32, scale applied once ----
+
+def _xla_conv2d_q(ctx, plan, x, w, scale, stride=(1, 1),
+                  out_dtype=jnp.bfloat16):
+    out = ref.conv2d_ref(x.astype(jnp.float32), w.astype(jnp.float32),
+                         stride=stride, out_dtype=jnp.float32)
+    return (out * scale[0][None, :, None, None]).astype(out_dtype)
+
+
+def _xla_matmul_q(ctx, plan, a, b, scale, out_dtype=jnp.bfloat16):
+    out = ref.matmul_ref(a.astype(jnp.float32), b.astype(jnp.float32),
+                         out_dtype=jnp.float32)
+    return (out * scale).astype(out_dtype)
+
+
+def xla_attention_decode_quant(q, kp, ks, vp, vs, tables, lengths
+                               ) -> jax.Array:
+    """Paged decode against an int8-quantized pool: ``kp``/``vp`` are
+    (num_blocks, KV, bs, hd) int8 and ``ks``/``vs`` the matching
+    (num_blocks, KV, bs) f32 per-(block, head, position) scales written by
+    the engine's quantizing insert. Dequantization happens in f32 on the
+    gathered view; the attention math is then exactly
+    :func:`xla_attention_decode`. xla-only: every backend's fallback chain
+    reaches it, and it keeps the quantized pool off the VJP path (decode is
+    inference)."""
+    kf = kp.astype(jnp.float32) * ks[..., None]
+    vf = vp.astype(jnp.float32) * vs[..., None]
+    return xla_attention_decode(q, kf, vf, tables, lengths)
+
+
+def _xla_attention_decode_quant_entry(ctx, plan, q, kp, ks, vp, vs, tables,
+                                      lengths):
+    return xla_attention_decode_quant(q, kp, ks, vp, vs, tables, lengths)
+
+
 # -- plan-spec builders (shared by every backend's instrumented entries) ----
 
 def _matmul_plan_spec(a, b, **kw):
@@ -260,6 +303,36 @@ def _conv2d_plan_spec(x, w, stride=(1, 1), **kw):
     sh, sw = stride
     return _conv_spec(N, c_I, c_O, (H - h_F) // sh + 1, (W - w_F) // sw + 1,
                       h_F, w_F, sh, sw, jnp.dtype(x.dtype).itemsize * 8)
+
+
+def _conv2d_q_plan_spec(x, w, scale=None, stride=(1, 1),
+                        out_dtype=jnp.bfloat16, **kw):
+    N, c_I, H, W = x.shape
+    c_O, _, h_F, w_F = w.shape
+    sh, sw = stride
+    return _conv_spec_q(N, c_I, c_O, (H - h_F) // sh + 1,
+                        (W - w_F) // sw + 1, h_F, w_F, sh, sw,
+                        x.dtype, w.dtype, out_dtype)
+
+
+def _matmul_q_plan_spec(a, b, scale=None, out_dtype=jnp.bfloat16, **kw):
+    m, k = a.shape
+    n = b.shape[1]
+    return _matmul_spec_q(m, n, k, a.dtype, b.dtype, out_dtype)
+
+
+def _attention_decode_quant_plan_spec(q, kp, ks, vp, vs, tables, lengths,
+                                      **kw):
+    """The quantized pool stream priced at its stored width: p_F counts the
+    int8 block bytes plus the f32 scale per (head, position) row —
+    (0.25 * hd + 1) / hd words per cached element."""
+    B, H, _, hd = q.shape
+    KV, bs = kp.shape[1], kp.shape[2]
+    w = tables.shape[1]
+    p_io = jnp.dtype(q.dtype).itemsize / 4.0
+    p_kv = (jnp.dtype(kp.dtype).itemsize / 4.0) + 1.0 / hd
+    return AttentionSpec(B=B, H=H, KV=KV, Lq=1, Lk=w * bs, hd=hd,
+                         prec=Precision(p_I=p_io, p_F=p_kv, p_O=p_io))
 
 
 def _attention_plan_spec(q, k, v, **kw):
@@ -325,6 +398,18 @@ register_backend(Backend(
             OpCapabilities(dtypes=("*",), flags=frozenset(ATTN_FLAGS))),
         "attention_decode": OpEntry(
             _xla_attention_decode_entry, OpCapabilities(dtypes=("*",))),
+        "attention_decode_quant": OpEntry(
+            _xla_attention_decode_quant_entry,
+            OpCapabilities(dtypes=("*",), accum_dtype="float32"),
+            spec_fn=_attention_decode_quant_plan_spec),
+        "conv2d_q": OpEntry(
+            _xla_conv2d_q,
+            OpCapabilities(dtypes=("*",), accum_dtype="float32"),
+            spec_fn=_conv2d_q_plan_spec),
+        "matmul_q": OpEntry(
+            _xla_matmul_q,
+            OpCapabilities(dtypes=("*",), accum_dtype="float32"),
+            spec_fn=_matmul_q_plan_spec),
         "conv2d_dist": OpEntry(_dist_entry("xla"), OpCapabilities(dtypes=("*",)),
                                spec_fn=_conv2d_plan_spec,
                                words_fn=_conv2d_dist_words),
@@ -458,6 +543,44 @@ def _pallas_attention_decode(ctx, plan, q, kp, vp, tables, lengths):
                          tables, lengths)
 
 
+def _pallas_conv2d_q(ctx, plan, x, w, scale, stride=(1, 1),
+                     out_dtype=jnp.bfloat16):
+    """No custom_vjp wrapper: the quantized entries are the inference path —
+    int8 operands carry no meaningful cotangent, and QAT differentiates the
+    fake-quantized f32 graph, never the int8 kernel itself."""
+    return _conv2d_q_pallas(x, w, scale, stride=stride, out_dtype=out_dtype,
+                            plan=plan, interpret=ctx.interpret)
+
+
+def _pallas_matmul_q(ctx, plan, a, b, scale, out_dtype=jnp.bfloat16):
+    return _matmul_q_pallas(a, b, scale, out_dtype=out_dtype, plan=plan,
+                            interpret=ctx.interpret)
+
+
+def _pallas_conv2d_q_words(ctx, plan, x, w, scale=None, stride=(1, 1),
+                           out_dtype=jnp.bfloat16, **kw):
+    return conv2d_q_hbm_words(x, w, scale, stride=stride, plan=plan,
+                              target=ctx.target, out_dtype=out_dtype)
+
+
+def _pallas_matmul_q_words(ctx, plan, a, b, scale=None,
+                           out_dtype=jnp.bfloat16, **kw):
+    return matmul_q_hbm_words(a, b, scale, plan=plan, target=ctx.target,
+                              out_dtype=out_dtype)
+
+
+def _pallas_conv2d_q_access(ctx, plan, x, w, scale=None, stride=(1, 1),
+                            out_dtype=jnp.bfloat16, **kw):
+    return conv2d_q_access_plan(x, w, scale, stride=stride, plan=plan,
+                                target=ctx.target, out_dtype=out_dtype)
+
+
+def _pallas_matmul_q_access(ctx, plan, a, b, scale=None,
+                            out_dtype=jnp.bfloat16, **kw):
+    return matmul_q_access_plan(a, b, scale, plan=plan, target=ctx.target,
+                                out_dtype=out_dtype)
+
+
 def _pallas_matmul_words(ctx, plan, a, b, out_dtype=None, **kw):
     return matmul_hbm_words(a, b, plan=plan, target=ctx.target,
                             out_dtype=out_dtype or ctx.acc_dtype)
@@ -557,6 +680,20 @@ register_backend(Backend(
         "conv2d": OpEntry(_pallas_conv2d, spec_fn=_conv2d_plan_spec,
                           words_fn=_pallas_conv2d_words,
                           access_plan_fn=_pallas_conv2d_access),
+        # quantized entries: int8 streams only (f32/bf16 callers should use
+        # the full-precision ops); accumulation declared per VRF013
+        "conv2d_q": OpEntry(
+            _pallas_conv2d_q,
+            OpCapabilities(dtypes=("int8",), accum_dtype="float32"),
+            spec_fn=_conv2d_q_plan_spec,
+            words_fn=_pallas_conv2d_q_words,
+            access_plan_fn=_pallas_conv2d_q_access),
+        "matmul_q": OpEntry(
+            _pallas_matmul_q,
+            OpCapabilities(dtypes=("int8",), accum_dtype="float32"),
+            spec_fn=_matmul_q_plan_spec,
+            words_fn=_pallas_matmul_q_words,
+            access_plan_fn=_pallas_matmul_q_access),
         "conv1d_causal": OpEntry(_pallas_conv1d,
                                  words_fn=_pallas_conv1d_words,
                                  access_plan_fn=_pallas_conv1d_access),

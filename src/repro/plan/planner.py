@@ -39,7 +39,28 @@ from .target import HardwareTarget, TPU_V5E
 # words and the Thm 2.2/2.3 bound). v2 dumps load with parallel=None.
 # v4: attention plans (kind="attention", closed-form (bq, bk) tiles, bound
 # from core.bounds.attention_bound, empty blocking). Older dumps load as-is.
-PLAN_FORMAT_VERSION = 4
+# v5: plans carry the per-operand storage dtype map (``dtypes``) derived
+# from the op's word-widths — quantized ops record int8 streams / bf16
+# stores so tools (roofline byte conversion, bench dumps) need not guess.
+# Older dumps load with dtypes=().
+PLAN_FORMAT_VERSION = 5
+
+
+def _width_dtype(width: float) -> str:
+    """Storage-dtype name of a word width (int8 canonicalizes the 0.25-word
+    class; fractional widths such as a quantized KV stream's p_F = 0.25 +
+    1/hd keep their numeric form)."""
+    names = {1.0: "float32", 0.5: "bfloat16", 0.25: "int8"}
+    return names.get(float(width), f"words:{float(width):g}")
+
+
+def _plan_dtypes(prec: Precision) -> Tuple[Tuple[str, str], ...]:
+    """The per-operand dtype map a v5 plan carries. Accumulation is always
+    f32 (every kernel's discipline, VRF013)."""
+    return (("input", _width_dtype(prec.p_I)),
+            ("filter", _width_dtype(prec.p_F)),
+            ("output", _width_dtype(prec.p_O)),
+            ("accum", "float32"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +120,10 @@ class ExecutionPlan:
     efficiency: float  # comm_volume / lower_bound
     sharding: Optional[ShardingPlan] = None
     parallel: Optional[ParallelSection] = None
+    # v5: per-operand storage dtypes ((operand, dtype) pairs — input/filter/
+    # output/accum), derived from the op's effective Precision. () in
+    # pre-v5 dumps.
+    dtypes: Tuple[Tuple[str, str], ...] = ()
 
     # -- views ---------------------------------------------------------------
     @property
@@ -186,6 +211,7 @@ class ExecutionPlan:
             "sharding": None,
             "parallel": (None if self.parallel is None
                          else self.parallel.to_dict()),
+            "dtypes": [list(kv) for kv in self.dtypes],
         }
         if self.sharding is not None:
             s = self.sharding
@@ -234,6 +260,8 @@ class ExecutionPlan:
             efficiency=float(d["efficiency"]),
             sharding=sharding,
             parallel=parallel,
+            dtypes=tuple((str(k), str(v))
+                         for k, v in d.get("dtypes", [])),
         )
 
     @classmethod
@@ -321,7 +349,8 @@ def _plan_conv(op: ConvSpec, target: HardwareTarget) -> ExecutionPlan:
     return ExecutionPlan(
         op=op, target=target, blocking=tuple(sorted(blk.b.items())),
         tiles=tiles, grid=grid, comm_volume=vol, lower_bound=lb,
-        efficiency=vol / max(lb, 1.0), sharding=sharding, parallel=parallel)
+        efficiency=vol / max(lb, 1.0), sharding=sharding, parallel=parallel,
+        dtypes=_plan_dtypes(op.prec or target.precision))
 
 
 def _parallel_section(shape: ConvShape, P: int, M_eff: float
@@ -410,7 +439,8 @@ def _plan_matmul(op: MatmulSpec, target: HardwareTarget) -> ExecutionPlan:
     return ExecutionPlan(
         op=op, target=target, blocking=tuple(sorted(blk.b.items())),
         tiles=tiles, grid=grid, comm_volume=vol, lower_bound=lb,
-        efficiency=vol / max(lb, 1.0), sharding=sharding)
+        efficiency=vol / max(lb, 1.0), sharding=sharding,
+        dtypes=_plan_dtypes(prec))
 
 
 def _plan_attention(op: AttentionSpec, target: HardwareTarget) -> ExecutionPlan:
@@ -439,7 +469,7 @@ def _plan_attention(op: AttentionSpec, target: HardwareTarget) -> ExecutionPlan:
     return ExecutionPlan(
         op=op, target=target, blocking=(), tiles=(bq, bk),
         grid=(rows, n_q, n_k), comm_volume=vol, lower_bound=lb,
-        efficiency=vol / max(lb, 1.0))
+        efficiency=vol / max(lb, 1.0), dtypes=_plan_dtypes(prec))
 
 
 def resolve_kernel_plan(

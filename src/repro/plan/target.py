@@ -24,6 +24,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 from repro.core.conv_model import BF16_ACC32, FP32, INT8_ACC32, Precision
 from repro.core.tiling import MemoryModel, TPU_VMEM_WORDS
+from repro.quant.spec import PrecisionSpec
 
 MeshAxes = Tuple[Tuple[str, int], ...]
 
@@ -49,6 +50,13 @@ class HardwareTarget:
     mesh_axes: MeshAxes = ()  # ((name, size), ...) for multi-device targets
     align_sublane: int = 8  # MXU sublane multiple (1 = no alignment)
     align_lane: int = 128  # MXU lane multiple (1 = no alignment)
+    # Optional quantized storage policy (repro.quant). When set, consumers
+    # that opt into the quantized path (ops.conv2d_q / matmul_q callers, the
+    # serving engine's kv_dtype knob) read the per-operand dtypes from here;
+    # its ``.precision`` projection is what the LP and bounds then price.
+    # ``precision`` above stays the full-precision default for ops that
+    # don't quantize.
+    quant: Optional[PrecisionSpec] = None
 
     def memory_model(self) -> MemoryModel:
         """The capacity model the blocking LP consumes."""
@@ -73,6 +81,10 @@ class HardwareTarget:
     def with_vmem(self, vmem_words: float) -> "HardwareTarget":
         return dataclasses.replace(self, vmem_words=float(vmem_words))
 
+    def with_quant(self, spec: Optional[PrecisionSpec]) -> "HardwareTarget":
+        """Attach (or clear, with None) a quantized storage policy."""
+        return dataclasses.replace(self, quant=spec)
+
     @classmethod
     def from_mesh(cls, mesh: Any, base: Optional["HardwareTarget"] = None
                   ) -> "HardwareTarget":
@@ -95,6 +107,7 @@ class HardwareTarget:
             "mesh_axes": [list(ax) for ax in self.mesh_axes],
             "align_sublane": self.align_sublane,
             "align_lane": self.align_lane,
+            "quant": None if self.quant is None else self.quant.to_dict(),
         }
 
     @classmethod
@@ -112,6 +125,8 @@ class HardwareTarget:
             mesh_axes=tuple((str(n), int(s)) for n, s in d.get("mesh_axes", ())),
             align_sublane=int(d.get("align_sublane", 8)),
             align_lane=int(d.get("align_lane", 128)),
+            quant=(None if d.get("quant") is None
+                   else PrecisionSpec.from_dict(d["quant"])),
         )
 
 

@@ -1,0 +1,35 @@
+"""``repro.quant`` — mixed-precision / quantized execution policy.
+
+The subsystem that makes the paper's "mixed precision" real end-to-end:
+
+  * :class:`PrecisionSpec` — per-operand storage dtypes (int8/fp8 streams,
+    f32 accumulation, per-channel scales) projecting to the paper's
+    ``Precision`` word-widths, so the blocking LP, the VMEM fits, and the
+    Thm 2.1/attention bounds all price operands at their *stored* width
+    (narrower operands buy bigger tiles and a lower bound);
+  * symmetric quantize/dequantize numerics with folded per-output-channel
+    scales (``quantize_conv_operands`` / ``quantize_matmul_operands`` feed
+    ``ops.conv2d_q`` / ``ops.matmul_q``);
+  * presets (``INT8_SPEC`` et al.) that ``HardwareTarget.with_quant`` and
+    the serving engine's KV-quant knob consume.
+
+Depends only on ``repro.core`` so every higher layer (plan, kernels, ops,
+serving) can import it without cycles.
+"""
+
+from .numerics import (  # noqa: F401
+    dequantize,
+    fold_output_scales,
+    quantize_conv_operands,
+    quantize_matmul_operands,
+    quantize_symmetric,
+)
+from .spec import (  # noqa: F401
+    DTYPE_WORDS,
+    FP8_E4M3_SPEC,
+    INT8_SPEC,
+    KV_INT8_SPEC,
+    NARROW_DTYPES,
+    PrecisionSpec,
+    dtype_words,
+)

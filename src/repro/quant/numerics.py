@@ -1,0 +1,87 @@
+"""Symmetric quantization numerics shared by kernels, serving, and tests.
+
+Per-channel (or per-tensor) symmetric int8: q = round(x / s) with
+s = amax / 127, so dequantization is exact at zero, never clips in-range
+values (amax / s == qmax), and the round-trip error is bounded by s / 2 —
+the properties the hypothesis suite in ``tests/test_quant.py`` pins down.
+
+Scale folding: conv(x_q * s_x, w_q * s_w[c_O]) = s_x * s_w[c_O] *
+conv_int(x_q, w_q), so the quantized kernels stream ONE folded f32 scale
+vector per output channel instead of dequantizing either operand — the
+int8 streams stay int8 all the way into VMEM and only the f32 accumulator
+sees full-width values.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_symmetric(x: jax.Array, axis: Optional[int] = None,
+                       bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric quantization to int8 storage.
+
+    ``axis=None`` -> one per-tensor scale (scalar); ``axis=i`` -> one scale
+    per slice along axis i (per-channel), reduced over every other axis.
+    Returns ``(q, scale)`` with ``q`` int8 and ``scale`` f32 shaped ``()`` or
+    ``(x.shape[axis],)``. All-zero slices get scale 1.0 (and quantize to 0),
+    so dequantization is always well-defined.
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    if axis is None:
+        amax = jnp.max(jnp.abs(xf))
+        scale = jnp.where(amax > 0, amax / qmax, 1.0)
+        sb = scale
+    else:
+        axis = axis % xf.ndim
+        red = tuple(d for d in range(xf.ndim) if d != axis)
+        amax = jnp.max(jnp.abs(xf), axis=red)
+        scale = jnp.where(amax > 0, amax / qmax, 1.0)
+        shape = [1] * xf.ndim
+        shape[axis] = xf.shape[axis]
+        sb = scale.reshape(shape)
+    q = jnp.clip(jnp.round(xf / sb), -qmax, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, axis: Optional[int] = None,
+               dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_symmetric` (up to the <= scale/2 error)."""
+    qf = jnp.asarray(q).astype(jnp.float32)
+    if axis is not None:
+        shape = [1] * qf.ndim
+        shape[axis % qf.ndim] = qf.shape[axis % qf.ndim]
+        scale = jnp.asarray(scale).reshape(shape)
+    return (qf * scale).astype(dtype)
+
+
+def fold_output_scales(s_in: jax.Array, s_out_channel: jax.Array
+                       ) -> jax.Array:
+    """Fold a per-tensor input scale and a per-output-channel filter scale
+    into the single (1, c_O) f32 vector the quantized kernels stream —
+    2D so the TPU operand has a (sublane, lane) layout."""
+    folded = jnp.asarray(s_in, jnp.float32) * jnp.asarray(s_out_channel,
+                                                          jnp.float32)
+    return folded.reshape(1, -1)
+
+
+def quantize_conv_operands(x: jax.Array, w: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(x_q int8, w_q int8, folded (1, c_O) scale) for ``ops.conv2d_q``:
+    per-tensor input scale, per-output-channel (OIHW axis 0) filter scales."""
+    x_q, s_x = quantize_symmetric(x, axis=None)
+    w_q, s_w = quantize_symmetric(w, axis=0)
+    return x_q, w_q, fold_output_scales(s_x, s_w)
+
+
+def quantize_matmul_operands(a: jax.Array, b: jax.Array
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(a_q int8, b_q int8, folded (1, n) scale) for ``ops.matmul_q``:
+    per-tensor A scale, per-column (axis 1) B scales."""
+    a_q, s_a = quantize_symmetric(a, axis=None)
+    b_q, s_b = quantize_symmetric(b, axis=1)
+    return a_q, b_q, fold_output_scales(s_a, s_b)

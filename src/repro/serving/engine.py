@@ -159,7 +159,7 @@ def _make_steps(cfg: ModelConfig, max_len: int, ctx: ExecutionContext):
 
 @functools.lru_cache(maxsize=None)
 def _make_paged_steps(cfg: ModelConfig, max_len: int, ctx: ExecutionContext,
-                      block_size: int):
+                      block_size: int, quantized: bool = False):
     """Compiled (insert, decode) for the paged pool. Prefill and sampling are
     shared with ``_make_steps`` — prefill still runs contiguous at batch 1;
     only its landing in the pool and the decode step are paged.
@@ -167,20 +167,43 @@ def _make_paged_steps(cfg: ModelConfig, max_len: int, ctx: ExecutionContext,
     ``insert`` retraces per distinct block count (<= max_len/block_size
     variants, the same ladder as the bucketed prefills); ``decode`` retraces
     per distinct table width w (ditto) — positions and table *contents* are
-    data, never trace constants."""
+    data, never trace constants.
+
+    ``quantized`` targets the int8 pool layout: the scatter quantizes each
+    (kv_head, position) row symmetrically over hd (matching the decode
+    step's ``layers._quantize_kv_row`` write path) and lands the int8 codes
+    plus the f32 scales on the pool's kp/ks/vp/vs leaves."""
 
     def insert(pool, row, blocks):  # row: batch-1 contiguous cache; (nt,) ids
         nt = blocks.shape[0]
 
-        def scatter(p, r):  # p (R, nb, KV, bs, hd); r (R, 1, KV, max_len, hd)
+        def block_rows(r):  # r (R, 1, KV, max_len, hd) -> (R, nt, KV, bs, hd)
             R, _, KV, L, hd = r.shape
             rb = r[:, 0, :, :min(nt * block_size, L), :]
             if nt * block_size > L:  # max_len below a whole block: zero-pad
                 rb = jnp.pad(rb, ((0, 0), (0, 0),
                                   (0, nt * block_size - L), (0, 0)))
-            rb = rb.reshape(R, KV, nt, block_size, hd).transpose(0, 2, 1, 3, 4)
-            return p.at[:, blocks].set(rb.astype(p.dtype))
+            return rb.reshape(R, KV, nt, block_size, hd).transpose(
+                0, 2, 1, 3, 4)
 
+        def scatter(p, r):  # p (R, nb, KV, bs, hd)
+            return p.at[:, blocks].set(block_rows(r).astype(p.dtype))
+
+        def scatter_q(p, s, r):  # + s (R, nb, KV, bs): per-row f32 scales
+            rb = block_rows(r).astype(jnp.float32)
+            amax = jnp.max(jnp.abs(rb), axis=-1)
+            scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+            q = jnp.clip(jnp.round(rb / scale[..., None]), -127.0,
+                         127.0).astype(jnp.int8)
+            return p.at[:, blocks].set(q), s.at[:, blocks].set(scale)
+
+        if quantized:
+            out = {}
+            for u, leaves in pool.items():
+                kp, ks = scatter_q(leaves["kp"], leaves["ks"], row[u]["k"])
+                vp, vs = scatter_q(leaves["vp"], leaves["vs"], row[u]["v"])
+                out[u] = {"kp": kp, "ks": ks, "vp": vp, "vs": vs}
+            return out
         return {u: {"kp": scatter(leaves["kp"], row[u]["k"]),
                     "vp": scatter(leaves["vp"], row[u]["v"])}
                 for u, leaves in pool.items()}
@@ -211,7 +234,15 @@ class Engine:
     block tables (``ops.attention_decode`` — Pallas end-to-end, no
     capability fallback). ``num_blocks=None`` sizes the pool for every slot
     to reach ``max_len``, capped by the target's HBM budget
-    (``kv.plan_pool_blocks``)."""
+    (``kv.plan_pool_blocks``).
+
+    ``kv_dtype="int8"`` (paged only) quantizes the pool: int8 blocks plus
+    per-(block, head, position) f32 scales — (0.25 + 1/hd) words per cached
+    element instead of bf16's 0.5, so the same HBM budget holds ~2x the
+    blocks (``kv.plan_pool_blocks(quantized=True)``) and each decode step
+    streams about half the cache words (the Lq=1 memory-independent term of
+    ``core.bounds.mixed_precision_attention_bound``). Output quality against
+    the bf16 pool is gated in ``benchmarks/quant_bench.py``."""
 
     def __init__(self, cfg: ModelConfig, params: PyTree, max_len: int = 512,
                  batch_size: Optional[int] = None,
@@ -220,7 +251,8 @@ class Engine:
                  prefill_bucket: Optional[int] = None,
                  paged: Optional[bool] = None,
                  block_size: int = kv.DEFAULT_BLOCK_SIZE,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 kv_dtype: str = "bf16"):
         assert cfg.causal, "serving requires a decoder model"
         self.cfg, self.params = cfg, params
         self.max_len = max_len
@@ -240,6 +272,13 @@ class Engine:
                              "disable fused_kv_cache")
         self.paged = paged
         self.block_size = block_size
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8', "
+                             f"got {kv_dtype!r}")
+        if kv_dtype == "int8" and not paged:
+            raise ValueError("kv_dtype='int8' requires the paged KV pool "
+                             "(the quantized layout lives on pool blocks)")
+        self.kv_quant = kv_dtype == "int8"
         if batch_size is None:
             batch_size = plan_batch_size(
                 cfg, max_len, self.target,
@@ -248,10 +287,12 @@ class Engine:
         if paged:
             if num_blocks is None:
                 num_blocks = kv.plan_pool_blocks(
-                    cfg, max_len, batch_size, block_size, target=self.target)
+                    cfg, max_len, batch_size, block_size, target=self.target,
+                    quantized=self.kv_quant)
             self.num_blocks = num_blocks
             self._paged_insert, self._paged_decode = _make_paged_steps(
-                cfg, max_len, self.ctx, block_size)
+                cfg, max_len, self.ctx, block_size,
+                quantized=self.kv_quant)
         if prefill_bucket is None:
             # ragged prompts each jit a prefill per distinct length; rounding
             # lengths up to a bucket bounds that to max_len/bucket traces.
@@ -288,7 +329,8 @@ class Engine:
             enumerate(requests))
         bs = self.block_size
         if self.paged:
-            cache = T.init_paged_cache(self.cfg, self.num_blocks, bs)
+            cache = T.init_paged_cache(self.cfg, self.num_blocks, bs,
+                                       quantized=self.kv_quant)
             alloc = kv.BlockAllocator(self.num_blocks)
             tables = np.zeros((B, -(-self.max_len // bs)), np.int32)
             slot_blocks: List[List[int]] = [[] for _ in range(B)]

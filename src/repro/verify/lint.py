@@ -15,6 +15,12 @@ Source rules (AST, so prose in comments/docstrings never trips them):
           GQA wrapper materialized repeated K/V in HBM (g x the traffic);
           the dispatch layer keeps heads factored. (``kernels/ref.py``'s
           repeat is the XLA reference semantics, hence the kernels/ scope.)
+  VRF013  (kernels/ only) ``<acc...>.astype(<narrow dtype>)`` — casting an
+          accumulator below float32 silently trades the quantization
+          error model (int8 storage, exact f32 accumulation) for a lossy
+          one. Casting the *final store* to the output dtype is fine; the
+          rule only fires when the cast target is a narrow dtype literal
+          (bfloat16/float16/int8/fp8), not e.g. ``o_ref.dtype``.
 
 Registry rules (imported live, so they track what's actually registered):
 
@@ -27,6 +33,10 @@ Registry rules (imported live, so they track what's actually registered):
   VRF012  declared capability flags match the entry fn's signature (e.g. a
           ``per_row_q_offset`` flag on an fn with no ``q_offset`` parameter
           would dispatch calls the kernel cannot honor).
+  VRF013  every entry whose declared dtypes include a sub-byte-word storage
+          format (int8 / fp8) also declares ``caps.accum_dtype`` at f32 or
+          wider — quantized storage without a stated accumulation contract
+          is unauditable.
 """
 
 from __future__ import annotations
@@ -51,6 +61,17 @@ _FLAG_PARAMS = {
     "key_mask": "key_mask",
 }
 
+# storage dtypes that demand a declared accumulation dtype (VRF013)
+_QUANT_DTYPES = frozenset({
+    "int8", "uint8", "float8_e4m3fn", "float8_e5m2", "fp8", "int4",
+})
+# dtype literals an accumulator must never be cast down to (VRF013)
+_NARROW_DTYPES = frozenset({
+    "bfloat16", "float16", "int8", "uint8", "float8_e4m3fn", "float8_e5m2",
+})
+# accumulation dtypes wide enough to satisfy VRF013
+_WIDE_ACCUM = frozenset({"float32", "float64", "int32", "int64"})
+
 
 @dataclasses.dataclass(frozen=True)
 class Violation:
@@ -72,6 +93,24 @@ def _terminal_name(node: ast.AST) -> Optional[str]:
     return None
 
 
+def _base_name(node: ast.AST) -> Optional[str]:
+    """Like :func:`_terminal_name` but seeing through subscripts and calls,
+    so ``acc_ref[...]`` and ``acc.sum()`` both resolve to their base name."""
+    while isinstance(node, (ast.Subscript, ast.Call)):
+        node = node.value if isinstance(node, ast.Subscript) else node.func
+    return _terminal_name(node)
+
+
+def _narrow_dtype_literal(node: ast.AST) -> Optional[str]:
+    """The narrow-dtype name if ``node`` is a literal like ``jnp.bfloat16``
+    or ``"int8"``; None for dynamic expressions such as ``o_ref.dtype``."""
+    name = _terminal_name(node)
+    if name is None and isinstance(node, ast.Constant) \
+            and isinstance(node.value, str):
+        name = node.value
+    return name if name in _NARROW_DTYPES else None
+
+
 class _Checker(ast.NodeVisitor):
     def __init__(self, path: Path, rel: str, in_kernels: bool):
         self.rel = rel
@@ -80,6 +119,16 @@ class _Checker(ast.NodeVisitor):
 
     def visit_Call(self, node: ast.Call) -> None:
         callee = _terminal_name(node.func)
+        if self.in_kernels:
+            if (callee == "astype" and isinstance(node.func, ast.Attribute)
+                    and node.args):
+                base = _base_name(node.func.value)
+                narrow = _narrow_dtype_literal(node.args[0])
+                if base is not None and "acc" in base and narrow is not None:
+                    self.found.append(Violation(
+                        "VRF013", self.rel, node.lineno,
+                        f"accumulator {base!r} cast down to {narrow} — "
+                        "accumulate in f32, cast only the final store"))
         if not self.in_kernels:
             if callee == "pallas_call":
                 self.found.append(Violation(
@@ -158,6 +207,19 @@ def lint_registry() -> List[Violation]:
                         "VRF012", "repro/ops/registry.py", 0,
                         f"{where}: declares capability {flag!r} but its fn "
                         f"accepts no {param!r} parameter"))
+            quant = sorted(set(entry.caps.dtypes) & _QUANT_DTYPES)
+            if quant:
+                acc = entry.caps.accum_dtype
+                if acc is None:
+                    out.append(Violation(
+                        "VRF013", "repro/ops/registry.py", 0,
+                        f"{where}: declares quantized dtypes {quant} but no "
+                        "accum_dtype (accumulation contract unstated)"))
+                elif acc not in _WIDE_ACCUM:
+                    out.append(Violation(
+                        "VRF013", "repro/ops/registry.py", 0,
+                        f"{where}: accum_dtype {acc!r} is narrower than "
+                        "float32 for quantized storage dtypes"))
     return out
 
 

@@ -11,6 +11,10 @@ metadata and asserts the static checks catch it:
   * ``same_slot_prefetch`` prefetches step ci+1 into the slot step ci is
     about to consume — the overlap bug double buffering exists to prevent
     (H2/H3).
+  * ``scale_applied_twice`` makes the quantized conv's folded scale vector
+    re-fetch on every reduction step instead of once — the classic
+    dequantize-in-the-loop bug. Totals move (counted > words_fn), so the
+    counted-vs-measured exactness check must flag it.
 
 ``run_seeded_mutants()`` returns ``(name, caught, detail)`` triples;
 ``scripts/verify.py --mutants`` (and the CI verify job) fail unless every
@@ -27,7 +31,7 @@ import jax.numpy as jnp
 
 from . import audit as _audit
 from . import hazards as hz
-from .access import KernelAccessPlan, WindowAccess
+from .access import BlockAccess, KernelAccessPlan, WindowAccess
 
 
 def _conv2d_plan() -> KernelAccessPlan:
@@ -84,10 +88,40 @@ def same_slot_prefetch() -> Tuple[bool, str]:
     return caught, "; ".join(str(h) for h in found[:2]) or "not detected"
 
 
+def scale_applied_twice() -> Tuple[bool, str]:
+    """The dequantize-at-every-application bug: the kernel fetches the
+    folded scale vector once per application site (per-tap AND at the final
+    store) instead of holding it resident, doubling the scale stream. The
+    words_fn charges the vector exactly once, so the counted-vs-measured
+    exactness check in ``audit_decision`` must fire."""
+    from repro import ops
+    from repro.kernels.quant import conv2d_q_access_plan
+    from repro.plan import TPU_V5E
+
+    x = jax.ShapeDtypeStruct((8, 64, 56, 56), jnp.int8)
+    w = jax.ShapeDtypeStruct((128, 64, 3, 3), jnp.int8)
+    s = jax.ShapeDtypeStruct((1, 128), jnp.float32)
+    ctx = ops.ExecutionContext(target=TPU_V5E, backend="pallas")
+    decision = ops.explain("conv2d_q", ctx=ctx, dtype="int8",
+                           spec_args=(x, w, s), spec_kw={"stride": (2, 2)})
+    ap = conv2d_q_access_plan(x, w, s, stride=(2, 2), plan=decision.plan)
+
+    extra = tuple(
+        dataclasses.replace(acc, name="scale(second application)")
+        for acc in ap.accesses
+        if isinstance(acc, BlockAccess) and acc.name == "scale")
+    assert extra, "conv2d_q access plan no longer carries a scale operand"
+    report = _audit.audit_decision(
+        dataclasses.replace(ap, accesses=ap.accesses + extra), decision)
+    caught = any("!= words_fn" in p for p in report.problems)
+    return caught, "; ".join(report.problems[:2]) or "not detected"
+
+
 MUTANTS: Tuple[Tuple[str, Callable[[], Tuple[bool, str]]], ...] = (
     ("halo_off_by_one", halo_off_by_one),
     ("dropped_dma_wait", dropped_dma_wait),
     ("same_slot_prefetch", same_slot_prefetch),
+    ("scale_applied_twice", scale_applied_twice),
 )
 
 

@@ -30,6 +30,16 @@ PALLAS = ops.ExecutionContext(target=TPU_V5E, backend="pallas")
 # the rest would just re-test xla through the fallback chain).
 # ---------------------------------------------------------------------------
 
+def _quantize_pool(pool):
+    """Per-(block, head, position) int8 quantization of a KV pool leaf —
+    the layout the engine's quantizing insert writes."""
+    from repro.quant import quantize_symmetric
+
+    flat = pool.reshape(-1, pool.shape[-1])
+    q, s = quantize_symmetric(flat, axis=0)
+    return (q.reshape(pool.shape), s.reshape(pool.shape[:-1]))
+
+
 def _op_case(op: str):
     """Canonical inputs + call kwargs for one registered op."""
     if op == "matmul":
@@ -49,6 +59,24 @@ def _op_case(op: str):
         return (jax.random.normal(KEY, (2, 4, 1, 16)) * 0.3,
                 jax.random.normal(K2, (7, 2, 16, 16)) * 0.3,
                 jax.random.normal(K3, (7, 2, 16, 16)),
+                jnp.asarray([[1, 3, 0], [4, 2, 6]], jnp.int32),
+                jnp.asarray([20, 45], jnp.int32)), {}
+    if op == "matmul_q":  # int8 streams + folded per-column scale
+        from repro.quant import quantize_matmul_operands
+
+        a = jax.random.normal(KEY, (64, 96))
+        b = jax.random.normal(K2, (96, 128))
+        return quantize_matmul_operands(a, b), {}
+    if op == "conv2d_q":
+        from repro.quant import quantize_conv_operands
+
+        x = jax.random.normal(KEY, (2, 8, 12, 12))
+        w = jax.random.normal(K2, (16, 8, 3, 3))
+        return quantize_conv_operands(x, w), {"stride": (1, 1)}
+    if op == "attention_decode_quant":  # int8 pools + per-position scales
+        kp, ks = _quantize_pool(jax.random.normal(K2, (7, 2, 16, 16)) * 0.3)
+        vp, vs = _quantize_pool(jax.random.normal(K3, (7, 2, 16, 16)))
+        return (jax.random.normal(KEY, (2, 4, 1, 16)) * 0.3, kp, ks, vp, vs,
                 jnp.asarray([[1, 3, 0], [4, 2, 6]], jnp.int32),
                 jnp.asarray([20, 45], jnp.int32)), {}
     if op == "conv2d_dist":  # P=1 grid: the mesh is one device, so the
@@ -84,7 +112,7 @@ def test_every_registered_op_is_swept():
     assert set(ops.backends()) == {"xla", "pallas", "im2col"}
     assert set(ops.registered_ops()) == {
         "matmul", "conv2d", "conv1d_causal", "attention", "attention_decode",
-        "conv2d_dist"}
+        "attention_decode_quant", "conv2d_q", "matmul_q", "conv2d_dist"}
     for op in ops.registered_ops():
         _op_case(op)  # raises if an op was registered without a sweep case
 

@@ -82,18 +82,22 @@ def test_v1_conv_plan_json_upgrades():
     back.pallas_specs()
 
 
-def test_plan_json_upgrade_chain_v1_to_v4():
+def test_plan_json_upgrade_chain_v1_to_v5():
     """Walk one conv dump through every historical format. v1 (3-tuple tiles,
     3-axis grid, no ``parallel``), v2 (spatial tiles, still no ``parallel``),
-    v3 (``parallel`` present), and current v4 fixtures must all load, and
-    each upgraded plan must agree with the live plan on everything its era
-    recorded."""
+    v3 (``parallel`` present), v4 (no per-operand ``dtypes``), and current v5
+    fixtures must all load, and each upgraded plan must agree with the live
+    plan on everything its era recorded."""
     meshed = TPU_V5E.with_mesh((("data", 4), ("model", 2)))
     ep = plan(CONV, meshed)
-    v4 = ep.to_dict()
-    assert v4["version"] == PLAN_FORMAT_VERSION == 4
-    assert v4["parallel"] is not None
+    v5 = ep.to_dict()
+    assert v5["version"] == PLAN_FORMAT_VERSION == 5
+    assert v5["parallel"] is not None
+    assert dict(v5["dtypes"])["accum"] == "float32"
 
+    # v4 predates the per-operand dtypes section — the key is absent.
+    v4 = {k: v for k, v in v5.items() if k != "dtypes"}
+    v4["version"] = 4
     # v3 conv dumps are layout-identical to v4 (v4 only added attention).
     v3 = dict(v4, version=3)
     # v2 predates the parallel section entirely — the key is absent.
@@ -103,18 +107,21 @@ def test_plan_json_upgrade_chain_v1_to_v4():
     v1 = dict(v2, version=1, tiles=v4["tiles"][:3],
               grid=[v4["grid"][0], v4["grid"][1], v4["grid"][4]])
 
-    assert ExecutionPlan.from_dict(v4) == ep
-    assert ExecutionPlan.from_dict(v3) == ep
-    assert ExecutionPlan.from_dict(v2) == dataclasses.replace(ep, parallel=None)
+    no_dtypes = dataclasses.replace(ep, dtypes=())
+    assert ExecutionPlan.from_dict(v5) == ep
+    assert ExecutionPlan.from_dict(v4) == no_dtypes
+    assert ExecutionPlan.from_dict(v3) == no_dtypes
+    assert ExecutionPlan.from_dict(v2) == dataclasses.replace(
+        no_dtypes, parallel=None)
 
     from_v1 = ExecutionPlan.from_dict(v1)
     assert from_v1.parallel is None
-    assert from_v1.tiles == tuple(v4["tiles"][:3]) + (CONV.h_O, CONV.w_O)
-    assert from_v1.grid == (v4["grid"][0], v4["grid"][1], 1, 1, v4["grid"][4])
+    assert from_v1.tiles == tuple(v5["tiles"][:3]) + (CONV.h_O, CONV.w_O)
+    assert from_v1.grid == (v5["grid"][0], v5["grid"][1], 1, 1, v5["grid"][4])
     assert from_v1.sharding == ep.sharding
 
     for back in (from_v1, ExecutionPlan.from_dict(v2),
-                 ExecutionPlan.from_dict(v3)):
+                 ExecutionPlan.from_dict(v3), ExecutionPlan.from_dict(v4)):
         assert back.op == ep.op and back.target == ep.target
         assert back.lower_bound == ep.lower_bound
         assert back.kernel_footprints()["output"] > 0
