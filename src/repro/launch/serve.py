@@ -46,6 +46,9 @@ def main():
     ap.add_argument("--backend", choices=("xla", "pallas"), default=None,
                     help="kernel backend override; default resolves from "
                          "REPRO_BACKEND and then the --target preset")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget from admission; "
+                         "expired requests finish with reason 'timeout'")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
@@ -72,7 +75,8 @@ def main():
                                         dtype=np.int32).astype(np.int32),
                     max_new_tokens=args.max_new,
                     temperature=args.temperature,
-                    stop_tokens=stop)
+                    stop_tokens=stop,
+                    deadline_s=args.deadline_s)
             for _ in range(args.requests)]
     cls = WaveEngine if args.engine == "wave" else Engine
     target = get_target(args.target)
@@ -82,14 +86,21 @@ def main():
     t0 = time.time()
     eng.serve(reqs)
     dt = time.time() - t0
-    total_new = sum(len(r.out_tokens) for r in reqs)  # real tokens only
+    # a request may not complete: resilience failures ("error") and expired
+    # deadlines ("timeout") still return whatever tokens were generated, so
+    # count and report per-reason rather than assuming success
+    total_new = sum(len(r.out_tokens) for r in reqs
+                    if r.out_tokens is not None)  # real tokens only
     reasons = collections.Counter(r.finish_reason for r in reqs)
+    ok = len(reqs) - reasons.get("error", 0) - reasons.get("timeout", 0)
     print(f"[{args.engine}] served {len(reqs)} requests "
           f"(batch={eng.batch_size}), {total_new} generated tokens in "
-          f"{dt:.2f}s ({total_new / dt:.1f} tok/s); finish={dict(reasons)}")
+          f"{dt:.2f}s ({total_new / dt:.1f} tok/s); "
+          f"completed={ok}/{len(reqs)} finish={dict(reasons)}")
     for i, r in enumerate(reqs[:4]):
+        out = [] if r.out_tokens is None else r.out_tokens[:12].tolist()
         print(f"  req{i}: prompt={r.prompt[:8].tolist()}... "
-              f"out={r.out_tokens[:12].tolist()} ({r.finish_reason})")
+              f"out={out} ({r.finish_reason})")
 
 
 if __name__ == "__main__":

@@ -48,20 +48,25 @@ from .context import (  # noqa: F401
     env_backend,
 )
 from .dispatch import (  # noqa: F401
+    QUARANTINE_PROBE_AFTER,
     DispatchDecision,
     attention,
     attention_decode,
     attention_decode_quant,
     attention_needs,
+    clear_quarantine,
     conv1d_causal,
     conv2d,
     conv2d_dist,
     conv2d_q,
+    dispatch_call,
     explain,
     matmul,
     matmul_q,
+    quarantined,
     record_dispatch,
     resolve,
+    set_fault_hook,
 )
 from .registry import (  # noqa: F401
     Backend,

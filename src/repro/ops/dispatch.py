@@ -18,21 +18,41 @@ Observability:
   * ``record_dispatch()``        - context manager capturing every decision
                                    made while it is active (including those
                                    made while tracing a jit).
+
+Runtime-failure fallback (``repro.resilience``): capability resolution only
+proves an entry *claims* to serve the call. When the chosen entry actually
+raises a ``TransientFault`` at execution, ``dispatch_call`` quarantines the
+failing ``(op, backend, shape-key)``, re-resolves down the chain (an entry
+may name an instrumented ``degrade_to`` backend so the demotion stays
+priced), and retries — the resulting decision records ``degraded=True`` +
+the fault name, with ``measured_words``/``bound_ratio`` re-priced for the
+backend that actually served the call. A quarantined combination is probed
+again after ``QUARANTINE_PROBE_AFTER`` dispatches. ``FatalFault`` always
+propagates. The ``REPRO_FAULTS`` env knob installs a seeded
+``resilience.FaultCampaign`` around every eager dispatch.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Any, List, Optional, Tuple
+import os
+from typing import Any, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.resilience.errors import TransientFault
 
 from .context import ExecutionContext, default_context
 from .registry import OpEntry, get_backend
 
 MAX_FALLBACK_DEPTH = 4  # registry misconfiguration guard, not a real limit
+# runtime-fallback executor: per-call bound on demote/retry attempts
+MAX_RUNTIME_ATTEMPTS = 4
+# a quarantined (op, backend, shape-key) is probed again on the Nth dispatch
+QUARANTINE_PROBE_AFTER = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +78,15 @@ class DispatchDecision:
     ``verify.AuditError`` unless it reproduces ``measured_words`` exactly,
     fits VMEM, stays at/below the recorded bound ratio, and the DMA
     schedule is hazard-free — so when this field is set it *equals*
-    ``measured_words``."""
+    ``measured_words``.
+
+    ``degraded``/``fault`` record *runtime* demotion: a backend along the
+    chain is quarantined after actually raising the named ``TransientFault``
+    (``"KernelLaunchError"``, ``"NumericFault"``, ...), so the call was
+    served further down the chain than capabilities alone required —
+    ``measured_words``/``bound_ratio`` are re-priced for the backend that
+    ran, making the communication cost of degradation visible in
+    ``ops.explain``."""
 
     op: str
     requested: str
@@ -67,6 +95,8 @@ class DispatchDecision:
     plan: Optional[Any] = None
     measured_words: Optional[float] = None
     audited: Optional[float] = None
+    degraded: bool = False
+    fault: Optional[str] = None
 
     @property
     def fell_back(self) -> bool:
@@ -93,10 +123,15 @@ class DispatchDecision:
         return self.measured_words / max(lb, 1.0)
 
     def why(self) -> str:
-        msg = (f"{self.op}: ran on requested backend {self.chosen!r}"
-               if not self.fell_back else
-               f"{self.op}: {self.requested!r} lacks "
-               f"{', '.join(self.missing)}; fell back to {self.chosen!r}")
+        if self.degraded:
+            msg = (f"{self.op}: runtime {self.fault} quarantined the "
+                   f"primary backend; degraded from {self.requested!r} to "
+                   f"{self.chosen!r} (words re-priced)")
+        elif not self.fell_back:
+            msg = f"{self.op}: ran on requested backend {self.chosen!r}"
+        else:
+            msg = (f"{self.op}: {self.requested!r} lacks "
+                   f"{', '.join(self.missing)}; fell back to {self.chosen!r}")
         if self.measured_words is not None:
             kind = ("inter-device" if self.op.endswith("_dist") else "HBM")
             msg += f"; measured {self.measured_words:.3e} {kind} words"
@@ -126,12 +161,88 @@ def record_dispatch():
                 break
 
 
+# ---------------------------------------------------------------------------
+# Runtime-failure state: the quarantine table and the fault-injection hook.
+# ---------------------------------------------------------------------------
+
+# (op, backend, shape-key) -> {"fault": taxonomy class name, "probe_in": N}.
+# Populated by dispatch_call when an entry raises a TransientFault; consulted
+# by _resolve_entry so subsequent calls (including jit traces) demote past
+# the failing backend. probe_in decrements only on executing dispatches; at
+# zero the entry is removed and the primary backend is probed again.
+_QUARANTINE: Dict[Tuple[str, str, Any], Dict[str, Any]] = {}
+
+_FAULT_HOOK: Optional[Any] = None  # resilience.faults.DispatchFaultHook
+_ENV_FAULTS_CHECKED = False
+
+
+def set_fault_hook(hook) -> None:
+    """Install/remove the campaign dispatch hook (``resilience.faults``)."""
+    global _FAULT_HOOK
+    _FAULT_HOOK = hook
+
+
+def _ensure_env_faults() -> None:
+    """First-eager-dispatch check of the ``REPRO_FAULTS`` env knob."""
+    global _ENV_FAULTS_CHECKED
+    if _ENV_FAULTS_CHECKED:
+        return
+    _ENV_FAULTS_CHECKED = True
+    if os.environ.get("REPRO_FAULTS"):
+        from repro.resilience.faults import install_env_campaign
+
+        install_env_campaign()
+
+
+def quarantined() -> Dict[Tuple[str, str, Any], Dict[str, Any]]:
+    """A snapshot of the quarantine table (introspection/tests)."""
+    return {k: dict(v) for k, v in _QUARANTINE.items()}
+
+
+def clear_quarantine() -> None:
+    """Forget every runtime quarantine (benchmarks reset between runs)."""
+    _QUARANTINE.clear()
+
+
+def _freeze_kw(v):
+    """A hashable, deterministic stand-in for one spec kwarg value; None for
+    ambient objects (meshes, blockings) that don't shape the quarantine."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, tuple):
+        return tuple(_freeze_kw(x) for x in v)
+    try:
+        return jnp.dtype(v).name  # dtype-likes (jnp.bfloat16, "int8", ...)
+    except TypeError:
+        return None
+
+
+def _shape_key(needs: Tuple[str, ...], spec_args: Optional[tuple],
+               spec_kw: Optional[dict]):
+    """The quarantine granularity: a kernel that faults on one launch
+    geometry is demoted for that geometry only, not for the whole op."""
+    if spec_args is None:
+        return (needs,)
+    arrs = tuple((tuple(getattr(a, "shape", ())), str(getattr(a, "dtype", "")))
+                 for a in spec_args)
+    kws = tuple((k, _freeze_kw(v))
+                for k, v in sorted((spec_kw or {}).items()))
+    return (needs, arrs, kws)
+
+
+def _is_tracing(*trees) -> bool:
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree_util.tree_leaves(trees))
+
+
 def _resolve_entry(op: str, ctx: ExecutionContext, dtype: Optional[str],
-                   needs: Tuple[str, ...]
-                   ) -> Tuple[OpEntry, DispatchDecision]:
+                   needs: Tuple[str, ...], shape_key: Any = None,
+                   probe: bool = False) -> Tuple[OpEntry, DispatchDecision]:
     requested = ctx.resolved_backend()
     name: Optional[str] = requested
     missing: Tuple[str, ...] = ()
+    degraded = False
+    fault: Optional[str] = None
     for _ in range(MAX_FALLBACK_DEPTH):
         if name is None:
             break
@@ -140,8 +251,20 @@ def _resolve_entry(op: str, ctx: ExecutionContext, dtype: Optional[str],
         lacks = (f"op:{op}",) if entry is None else entry.caps.missing(
             dtype=dtype, needs=needs)
         if not lacks:
+            q = _QUARANTINE.get((op, name, shape_key))
+            if q is not None and probe:
+                q["probe_in"] -= 1
+                if q["probe_in"] <= 0:  # probe the primary again
+                    del _QUARANTINE[(op, name, shape_key)]
+                    q = None
+            if q is not None:
+                missing = missing + (f"fault:{q['fault']}",)
+                degraded, fault = True, q["fault"]
+                name = entry.degrade_to or backend.fallback
+                continue
             decision = DispatchDecision(op=op, requested=requested,
-                                        chosen=name, missing=missing)
+                                        chosen=name, missing=missing,
+                                        degraded=degraded, fault=fault)
             return entry, decision
         missing = missing + lacks
         name = backend.fallback
@@ -197,9 +320,13 @@ def resolve(op: str, ctx: Optional[ExecutionContext] = None,
     """Capability-resolve one call; solve the entry's LP plan and measured
     HBM-word counter if it declares them. ``audit=True`` additionally runs
     the ``repro.verify`` static auditor against the chosen entry's access
-    plan (raising on any mismatch or hazard)."""
+    plan (raising on any mismatch or hazard). Quarantine-aware (a runtime-
+    quarantined backend is skipped, the decision marked ``degraded``) but
+    never consumes quarantine probes — only executing dispatches do."""
     ctx = default_context() if ctx is None else ctx
-    entry, decision = _resolve_entry(op, ctx, dtype, tuple(needs))
+    needs = tuple(needs)
+    entry, decision = _resolve_entry(
+        op, ctx, dtype, needs, shape_key=_shape_key(needs, spec_args, spec_kw))
     decision = _attach_plan_and_words(entry, decision, ctx, spec_args, spec_kw)
     decision = _maybe_audit(entry, decision, ctx, spec_args, spec_kw, audit)
     for log in _TRACE:
@@ -219,9 +346,65 @@ def explain(op: str, ctx: Optional[ExecutionContext] = None,
     only shapes/dtypes are consulted. ``audit=True`` runs the static
     communication auditor and stamps ``DispatchDecision.audited``."""
     ctx = default_context() if ctx is None else ctx
-    entry, decision = _resolve_entry(op, ctx, dtype, tuple(needs))
+    needs = tuple(needs)
+    entry, decision = _resolve_entry(
+        op, ctx, dtype, needs, shape_key=_shape_key(needs, spec_args, spec_kw))
     decision = _attach_plan_and_words(entry, decision, ctx, spec_args, spec_kw)
     return _maybe_audit(entry, decision, ctx, spec_args, spec_kw, audit)
+
+
+def dispatch_call(op: str, ctx: ExecutionContext, dtype: Optional[str],
+                  needs: Tuple[str, ...], spec_args: tuple,
+                  spec_kw: Optional[dict] = None,
+                  call_args: Optional[tuple] = None,
+                  call_kw: Optional[dict] = None):
+    """Resolve AND execute one op call with runtime-failure fallback.
+
+    The public op wrappers funnel through here: resolve (quarantine-aware,
+    consuming probes), price the plan/words, run the entry — through the
+    fault-injection hook when a campaign is active — and on a
+    ``TransientFault`` quarantine the failing ``(op, backend, shape-key)``
+    and re-resolve. An entry with a ``degrade_to``/fallback chain demotes;
+    a terminal entry retries in place. ``FatalFault`` (and anything not in
+    the taxonomy) propagates. The decision lands in ``record_dispatch``
+    logs only for the execution that actually served the call."""
+    _ensure_env_faults()
+    spec_kw = spec_kw or {}
+    call_args = spec_args if call_args is None else call_args
+    call_kw = dict(spec_kw) if call_kw is None else call_kw
+    key = _shape_key(needs, spec_args, spec_kw)
+    last_fault: Optional[TransientFault] = None
+    for _ in range(MAX_RUNTIME_ATTEMPTS):
+        entry, decision = _resolve_entry(op, ctx, dtype, needs,
+                                         shape_key=key, probe=True)
+        decision = _attach_plan_and_words(entry, decision, ctx,
+                                          spec_args, spec_kw)
+
+        def runner(entry=entry, decision=decision):
+            return entry.fn(ctx, decision.plan, *call_args, **call_kw)
+
+        hook = _FAULT_HOOK
+        try:
+            if hook is not None:
+                out = hook.run(op, decision.chosen, runner,
+                               tracing=_is_tracing(call_args, call_kw))
+            else:
+                out = runner()
+        except TransientFault as e:
+            last_fault = e
+            nxt = entry.degrade_to or get_backend(decision.chosen).fallback
+            inj = getattr(e, "injection", None)
+            if inj is not None and inj.resolution is None:
+                inj.resolution = "degraded" if nxt is not None else "retried"
+            if nxt is not None:
+                _QUARANTINE[(op, decision.chosen, key)] = {
+                    "fault": type(e).__name__,
+                    "probe_in": QUARANTINE_PROBE_AFTER}
+            continue  # re-resolve: demote past the quarantine, or retry
+        for log in _TRACE:
+            log.append(decision)
+        return out
+    raise last_fault
 
 
 # ---------------------------------------------------------------------------
@@ -239,9 +422,8 @@ def matmul(a, b, ctx: Optional[ExecutionContext] = None, out_dtype=None):
     out_dtype = out_dtype or ctx.acc_dtype
     # out_dtype rides in spec_kw so the measured-words counter charges the
     # store stream at the dtype the kernel actually writes
-    entry, dec = resolve("matmul", ctx, dtype=str(a.dtype), spec_args=(a, b),
+    return dispatch_call("matmul", ctx, str(a.dtype), (), (a, b),
                          spec_kw={"out_dtype": out_dtype})
-    return entry.fn(ctx, dec.plan, a, b, out_dtype=out_dtype)
 
 
 def conv2d(x, w, stride=(1, 1), ctx: Optional[ExecutionContext] = None,
@@ -249,10 +431,8 @@ def conv2d(x, w, stride=(1, 1), ctx: Optional[ExecutionContext] = None,
     """Direct 7NL convolution (VALID padding) through the dispatched backend."""
     ctx = default_context() if ctx is None else ctx
     out_dtype = out_dtype or ctx.acc_dtype
-    entry, dec = resolve("conv2d", ctx, dtype=str(x.dtype),
-                         spec_args=(x, w),
+    return dispatch_call("conv2d", ctx, str(x.dtype), (), (x, w),
                          spec_kw={"stride": stride, "out_dtype": out_dtype})
-    return entry.fn(ctx, dec.plan, x, w, stride=stride, out_dtype=out_dtype)
 
 
 def matmul_q(a, b, scale, ctx: Optional[ExecutionContext] = None,
@@ -265,10 +445,8 @@ def matmul_q(a, b, scale, ctx: Optional[ExecutionContext] = None,
     store is half of what moves the measured words."""
     ctx = default_context() if ctx is None else ctx
     out_dtype = out_dtype or jnp.bfloat16
-    entry, dec = resolve("matmul_q", ctx, dtype=str(a.dtype),
-                         spec_args=(a, b, scale),
+    return dispatch_call("matmul_q", ctx, str(a.dtype), (), (a, b, scale),
                          spec_kw={"out_dtype": out_dtype})
-    return entry.fn(ctx, dec.plan, a, b, scale, out_dtype=out_dtype)
 
 
 def conv2d_q(x, w, scale, stride=(1, 1),
@@ -278,11 +456,8 @@ def conv2d_q(x, w, scale, stride=(1, 1),
     ``out_dtype`` defaults to bf16 (see :func:`matmul_q`)."""
     ctx = default_context() if ctx is None else ctx
     out_dtype = out_dtype or jnp.bfloat16
-    entry, dec = resolve("conv2d_q", ctx, dtype=str(x.dtype),
-                         spec_args=(x, w, scale),
+    return dispatch_call("conv2d_q", ctx, str(x.dtype), (), (x, w, scale),
                          spec_kw={"stride": stride, "out_dtype": out_dtype})
-    return entry.fn(ctx, dec.plan, x, w, scale, stride=stride,
-                    out_dtype=out_dtype)
 
 
 def conv2d_dist(x, w, stride=(1, 1), blocking=None, mesh=None,
@@ -297,20 +472,16 @@ def conv2d_dist(x, w, stride=(1, 1), blocking=None, mesh=None,
     (halo + psum), ratioed against the plan's Thm 2.2/2.3 parallel bound."""
     ctx = default_context() if ctx is None else ctx
     out_dtype = out_dtype or ctx.acc_dtype
-    entry, dec = resolve(
-        "conv2d_dist", ctx, dtype=str(x.dtype), spec_args=(x, w),
+    return dispatch_call(
+        "conv2d_dist", ctx, str(x.dtype), (), (x, w),
         spec_kw={"stride": stride, "out_dtype": out_dtype,
                  "blocking": blocking, "mesh": mesh})
-    return entry.fn(ctx, dec.plan, x, w, stride=stride, out_dtype=out_dtype,
-                    blocking=blocking, mesh=mesh)
 
 
 def conv1d_causal(x, w, ctx: Optional[ExecutionContext] = None):
     """Causal depthwise conv1d (the mamba/xLSTM short convolution)."""
     ctx = default_context() if ctx is None else ctx
-    entry, dec = resolve("conv1d_causal", ctx, dtype=str(x.dtype),
-                         spec_args=(x, w))
-    return entry.fn(ctx, dec.plan, x, w)
+    return dispatch_call("conv1d_causal", ctx, str(x.dtype), (), (x, w))
 
 
 def attention_needs(q_offset=0, key_mask=None) -> Tuple[str, ...]:
@@ -336,11 +507,10 @@ def attention(q, k, v, causal: bool = True, q_offset=0, key_mask=None,
     fall back by declared capability; traced and per-row offsets ride the
     flash kernel's scalar-prefetch path."""
     ctx = default_context() if ctx is None else ctx
-    entry, dec = resolve("attention", ctx, dtype=str(q.dtype),
-                         needs=attention_needs(q_offset, key_mask),
-                         spec_args=(q, k, v))
-    return entry.fn(ctx, dec.plan, q, k, v, causal=causal,
-                    q_offset=q_offset, key_mask=key_mask)
+    return dispatch_call("attention", ctx, str(q.dtype),
+                         attention_needs(q_offset, key_mask), (q, k, v),
+                         call_kw={"causal": causal, "q_offset": q_offset,
+                                  "key_mask": key_mask})
 
 
 def attention_decode(q, kp, vp, tables, lengths,
@@ -354,9 +524,8 @@ def attention_decode(q, kp, vp, tables, lengths,
     gather copy); the xla entry gathers to a contiguous view first — the
     measured-words gap between them is the point of the paged subsystem."""
     ctx = default_context() if ctx is None else ctx
-    entry, dec = resolve("attention_decode", ctx, dtype=str(q.dtype),
-                         spec_args=(q, kp, vp, tables, lengths))
-    return entry.fn(ctx, dec.plan, q, kp, vp, tables, lengths)
+    return dispatch_call("attention_decode", ctx, str(q.dtype), (),
+                         (q, kp, vp, tables, lengths))
 
 
 def attention_decode_quant(q, kp, ks, vp, vs, tables, lengths,
@@ -371,6 +540,5 @@ def attention_decode_quant(q, kp, ks, vp, vs, tables, lengths,
     *pool's* halved stream width (the plan's p_F ~ 0.25 + 1/hd), not the
     gather kernel."""
     ctx = default_context() if ctx is None else ctx
-    entry, dec = resolve("attention_decode_quant", ctx, dtype=str(q.dtype),
-                         spec_args=(q, kp, ks, vp, vs, tables, lengths))
-    return entry.fn(ctx, dec.plan, q, kp, ks, vp, vs, tables, lengths)
+    return dispatch_call("attention_decode_quant", ctx, str(q.dtype), (),
+                         (q, kp, ks, vp, vs, tables, lengths))

@@ -122,6 +122,12 @@ class OpEntry:
     # execution is a shard_map program, not one Pallas launch — its
     # shard-local conv2d entry is audited instead).
     access_plan_fn: Optional[Callable] = None
+    # runtime-degradation target: the backend dispatch_call demotes to when
+    # this entry raises a TransientFault at execution. None = follow the
+    # backend's capability fallback. Naming an *instrumented* backend here
+    # (conv2d pallas -> im2col) keeps the degraded decision priced —
+    # measured_words/bound_ratio show what the demotion costs.
+    degrade_to: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -677,9 +683,13 @@ register_backend(Backend(
         "matmul": OpEntry(_pallas_matmul, spec_fn=_matmul_plan_spec,
                           words_fn=_pallas_matmul_words,
                           access_plan_fn=_pallas_matmul_access),
+        # runtime faults demote to the instrumented Im2Col baseline (not
+        # straight to uninstrumented xla) so the 3.9-7.2x words cost of
+        # degradation stays measured (PR 4's conv_bench gap)
         "conv2d": OpEntry(_pallas_conv2d, spec_fn=_conv2d_plan_spec,
                           words_fn=_pallas_conv2d_words,
-                          access_plan_fn=_pallas_conv2d_access),
+                          access_plan_fn=_pallas_conv2d_access,
+                          degrade_to="im2col"),
         # quantized entries: int8 streams only (f32/bf16 callers should use
         # the full-precision ops); accumulation declared per VRF013
         "conv2d_q": OpEntry(

@@ -37,6 +37,20 @@ request's output batch-invariant, greedy or sampled.
 ``WaveEngine`` keeps the old wave-lockstep *scheduling* (admission only
 when every slot is free) on top of the same corrected primitives; it exists
 as the benchmark baseline for ``benchmarks/serving_bench.py``.
+
+Graceful degradation (``repro.resilience``): transient faults at the host
+scheduling sites never poison the lockstep batch. Admission-time faults
+retry with bounded backoff and then fail only the one request
+(``finish_reason="error"``); a NaN-logit guard in the sample step fails
+only the affected rows after idempotent decode retries (a decode step
+rewrites the same cache positions with the same values, so re-running it
+is safe); an injected pool starvation rides the normal backpressure path;
+a ``kv.check()`` integrity fault triggers a full pool rebuild from
+host-side request state (prompts + accepted tokens — K/V projections are
+position-local, so re-prefilling reproduces the incrementally-written
+cache). Per-request ``deadline_s`` adds ``finish_reason="timeout"``. The
+active :func:`repro.resilience.faults.active_campaign` is consulted at the
+``admit/*``, ``decode/*`` and ``finish/*`` sites.
 """
 
 from __future__ import annotations
@@ -44,6 +58,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -54,10 +69,16 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.ops import ExecutionContext
 from repro.plan import CPU_INTERPRET, HardwareTarget
+from repro.resilience import errors as flt
+from repro.resilience import faults as fj
 
 from . import kv
 
 PyTree = Any
+
+# never-deadlock backstop: consecutive scheduling rounds with queued work,
+# no active slot, and no admission before the loop declares itself stalled
+_STALL_LIMIT = 10_000
 
 
 @dataclasses.dataclass
@@ -73,6 +94,13 @@ class Request:
       * ``"stop"``        - a stop token was emitted
       * ``"length"``      - ``max_new_tokens`` reached
       * ``"cache_limit"`` - the ``max_len`` cache filled up first
+      * ``"error"``       - an unrecoverable per-request fault (persistent
+                            NaN logits on this row, admission retries
+                            exhausted); other rows keep decoding
+      * ``"timeout"``     - ``deadline_s`` elapsed since admission
+
+    ``deadline_s``: optional wall-clock budget, measured from admission;
+    an expired request keeps the tokens generated so far.
     """
 
     prompt: np.ndarray  # (len,) int32
@@ -80,6 +108,7 @@ class Request:
     temperature: float = 0.0  # 0 = greedy
     stop_tokens: Tuple[int, ...] = ()
     rng_seed: Optional[int] = None
+    deadline_s: Optional[float] = None
     out_tokens: Optional[np.ndarray] = None
     finish_reason: Optional[str] = None
 
@@ -91,6 +120,7 @@ class _Slot:
     request: Request
     budget: int  # min(max_new_tokens, cache capacity left after the prompt)
     generated: List[int] = dataclasses.field(default_factory=list)
+    t0: float = 0.0  # admission wall-clock (deadline anchor)
 
 
 def plan_batch_size(cfg: ModelConfig, max_len: int, target: HardwareTarget,
@@ -140,16 +170,25 @@ def _make_steps(cfg: ModelConfig, max_len: int, ctx: ExecutionContext):
     def sample(logits, base_key, seeds, steps, temps):
         """Row i: greedy argmax if temps[i] == 0, else a categorical draw
         keyed by (base_key, seeds[i], steps[i]) — no shared key state, so
-        batch composition can never shift anyone's sampling stream."""
-        greedy = jnp.argmax(logits, axis=-1)
+        batch composition can never shift anyone's sampling stream.
+
+        Also returns the per-row NaN/Inf flag (the resilience layer's
+        numeric guard): the host already syncs on the sampled tokens every
+        step, so the flag rides along with zero extra device round-trips.
+        Flagged rows sample from zeroed logits; the engine never records
+        their tokens."""
+        bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
+        safe = jnp.where(bad[:, None], 0.0, logits)
+        greedy = jnp.argmax(safe, axis=-1)
 
         def one(seed, step, row, t):
             key = jax.random.fold_in(jax.random.fold_in(base_key, seed), step)
             return jax.random.categorical(
                 key, row / jnp.maximum(t, 1e-6), axis=-1)
 
-        sampled = jax.vmap(one)(seeds, steps, logits, temps)
-        return jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
+        sampled = jax.vmap(one)(seeds, steps, safe, temps)
+        toks = jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
+        return toks, bad
 
     return (jax.jit(prefill),
             jax.jit(insert, donate_argnums=(0,)),
@@ -252,8 +291,17 @@ class Engine:
                  paged: Optional[bool] = None,
                  block_size: int = kv.DEFAULT_BLOCK_SIZE,
                  num_blocks: Optional[int] = None,
-                 kv_dtype: str = "bf16"):
+                 kv_dtype: str = "bf16",
+                 admission_retries: int = 3,
+                 numeric_retries: int = 2,
+                 retry_backoff_s: float = 0.001):
         assert cfg.causal, "serving requires a decoder model"
+        # resilience policy: transient admission faults retry with
+        # exponential backoff; NaN decode steps retry idempotently before
+        # failing only the affected rows (module docstring)
+        self.admission_retries = admission_retries
+        self.numeric_retries = numeric_retries
+        self.retry_backoff_s = retry_backoff_s
         self.cfg, self.params = cfg, params
         self.max_len = max_len
         self.target = target or CPU_INTERPRET
@@ -325,6 +373,9 @@ class Engine:
                 raise ValueError("max_new_tokens must be >= 1")
             if r.rng_seed is not None and not -2**31 <= r.rng_seed < 2**31:
                 raise ValueError("rng_seed must fit in int32")
+            if r.deadline_s is not None and r.deadline_s <= 0:
+                raise ValueError("deadline_s must be positive")
+        camp = fj.active_campaign()
         queue: Deque[Tuple[int, Request]] = collections.deque(
             enumerate(requests))
         bs = self.block_size
@@ -345,29 +396,38 @@ class Engine:
         seeds = np.zeros(B, np.int32)  # per-slot sampling stream ids
         temps = np.zeros(B, np.float32)
 
+        def finish(s: int, reason: str) -> None:
+            """Close slot s with ``reason``, keeping its generated tokens,
+            and release its resources (the ``finish/*`` campaign site)."""
+            slot = slots[s]
+            r = slot.request
+            r.out_tokens = np.asarray(slot.generated, np.int32)
+            r.finish_reason = reason
+            slots[s] = None
+            tok[s], temps[s] = 0, 0.0  # dead row decodes greedily into void
+            if self.paged:
+                if camp is not None:
+                    inj = camp.draw("finish/pool", kinds=("pool",))
+                    if inj is not None:  # repaired at the next check/rebuild
+                        camp.corrupt_allocator(alloc, inj)
+                for bid in slot_blocks[s]:
+                    alloc.free(bid)  # shared prefixes -> refcount decrements
+                slot_blocks[s] = []
+                tables[s, :] = 0  # dead row reads/writes garbage block 0
+                tables_dev.clear()
+
         def record(s: int, t: int) -> None:
             """Account one generated token for slot s; free it when done."""
             slot = slots[s]
             slot.generated.append(int(t))
             r = slot.request
             if int(t) in r.stop_tokens:
-                reason = "stop"
+                finish(s, "stop")
             elif len(slot.generated) >= slot.budget:
-                reason = ("length" if slot.budget >= r.max_new_tokens
-                          else "cache_limit")
+                finish(s, "length" if slot.budget >= r.max_new_tokens
+                       else "cache_limit")
             else:
                 tok[s] = int(t)
-                return
-            r.out_tokens = np.asarray(slot.generated, np.int32)
-            r.finish_reason = reason
-            slots[s] = None
-            tok[s], temps[s] = 0, 0.0  # dead row decodes greedily into void
-            if self.paged:
-                for bid in slot_blocks[s]:
-                    alloc.free(bid)  # shared prefixes -> refcount decrements
-                slot_blocks[s] = []
-                tables[s, :] = 0  # dead row reads/writes garbage block 0
-                tables_dev.clear()
 
         def reserve(r: Request, budget: int) -> Optional[List[int]]:
             """Reserve the request's whole block budget (prompt + decode
@@ -397,8 +457,138 @@ class Engine:
                 blocks.append(alloc.alloc())
             return blocks
 
+        def rebuild_pool():
+            """Fresh allocator + pool, rebuilt from host-side request state.
+
+            Every live slot re-reserves its block budget against the new
+            allocator (prefix sharing intact — reservation order is slot
+            order, deterministic) and re-prefills exactly the tokens already
+            written to the cache (``prompt + generated[:pos - plen]``). K/V
+            projections are position-local and RoPE is applied pre-cache, so
+            the rebuilt pool matches the incrementally-written one bit for
+            bit over every read-visible position."""
+            new_alloc = kv.BlockAllocator(self.num_blocks)
+            new_cache = T.init_paged_cache(self.cfg, self.num_blocks, bs,
+                                           quantized=self.kv_quant)
+            tables_dev.clear()
+            for s in range(B):
+                slot = slots[s]
+                if slot is None:
+                    slot_blocks[s] = []
+                    tables[s, :] = 0
+                    continue
+                r = slot.request
+                plen = len(r.prompt)
+                need = len(slot_blocks[s])
+                chain = kv.prefix_chain(r.prompt, bs)
+                blocks: List[int] = []
+                for key in chain:
+                    bid = new_alloc.lookup(key)
+                    if bid is not None:
+                        blocks.append(new_alloc.ref(bid))
+                        continue
+                    b = new_alloc.alloc()
+                    new_alloc.register(b, key)
+                    blocks.append(b)
+                while len(blocks) < need:
+                    blocks.append(new_alloc.alloc())
+                slot_blocks[s] = blocks
+                tables[s, :] = 0
+                tables[s, :len(blocks)] = blocks
+                # the cache holds the prompt plus every already-written
+                # accepted token; the pending token (tok[s]) is rewritten by
+                # the next decode step as usual
+                written = int(pos[s])
+                lp = min(self.max_len,
+                         -(-written // self.prefill_bucket)
+                         * self.prefill_bucket)
+                tokens = np.zeros((1, lp), np.int32)
+                tokens[0, :plen] = r.prompt
+                tokens[0, plen:written] = slot.generated[:written - plen]
+                mask = np.zeros((1, lp), bool)
+                mask[0, :written] = True
+                _, row = self._prefill(
+                    self.params, jnp.asarray(tokens), jnp.asarray(mask),
+                    jnp.asarray(written - 1, jnp.int32))
+                nt = -(-written // bs)
+                new_cache = self._paged_insert(
+                    new_cache, row, jnp.asarray(blocks[:nt], jnp.int32))
+            return new_alloc, new_cache
+
+        def admit_prefill(plen: int, prompt: np.ndarray):
+            """Batch-1 prefill with bounded retry-with-backoff around the
+            transient-fault sites (``admit/launch`` raises, ``admit/numeric``
+            poisons, plus the always-on finite-logits guard). Returns
+            ``(logits, cache_row)``, or None once ``admission_retries``
+            retries are exhausted — the caller then fails that one request,
+            nobody else."""
+            lp = min(self.max_len,
+                     -(-plen // self.prefill_bucket) * self.prefill_bucket)
+            tokens = np.zeros((1, lp), np.int32)
+            tokens[0, :plen] = prompt
+            mask = np.zeros((1, lp), bool)
+            mask[0, :plen] = True
+            for attempt in range(self.admission_retries + 1):
+                num_inj = None
+                try:
+                    if camp is not None:
+                        inj = camp.draw("admit/launch",
+                                        kinds=("launch", "dma"), op="prefill")
+                        if inj is not None:
+                            raise camp.fault_for(inj, op="prefill",
+                                                 backend=self.ctx.backend)
+                    logits1, row = self._prefill(
+                        self.params, jnp.asarray(tokens), jnp.asarray(mask),
+                        jnp.asarray(plen - 1, jnp.int32))
+                    if camp is not None:
+                        num_inj = camp.draw("admit/numeric",
+                                            kinds=("numeric",), op="prefill")
+                        if num_inj is not None:
+                            logits1 = camp.corrupt_output(logits1, num_inj)
+                    if not np.all(np.isfinite(
+                            np.asarray(logits1, np.float32))):
+                        raise flt.NumericFault("non-finite prefill logits",
+                                               op="prefill",
+                                               injection=num_inj)
+                except flt.TransientFault as e:
+                    last = attempt == self.admission_retries
+                    if camp is not None:
+                        camp.resolve(e, "row_failed" if last else "retried")
+                    if not last:
+                        time.sleep(min(self.retry_backoff_s * (2 ** attempt),
+                                       0.05))
+                    continue
+                return logits1, row
+            return None
+
+        rounds = 0
+        stall = 0  # consecutive no-slot no-admission rounds with queued work
         while queue or any(s is not None for s in slots):
+            rounds += 1
+            # -- deadline sweep: expire requests past their wall budget -----
+            now = time.monotonic()
+            for s in range(B):
+                slot = slots[s]
+                if (slot is not None
+                        and slot.request.deadline_s is not None
+                        and now - slot.t0 >= slot.request.deadline_s):
+                    finish(s, "timeout")
+            # -- pool integrity: check every round under a campaign (finish
+            # may have just corrupted the allocator), periodically otherwise;
+            # a tripped invariant rebuilds pool + allocator from host state
+            if self.paged and (camp is not None or rounds % 256 == 0):
+                if camp is not None:
+                    inj = camp.draw("decode/pool", kinds=("pool",))
+                    if inj is not None:
+                        camp.corrupt_allocator(alloc, inj)
+                try:
+                    alloc.check()
+                except flt.PoolIntegrityFault:
+                    alloc, cache = rebuild_pool()
+                    if camp is not None:
+                        camp.resolve_kind("pool", "rebuilt")
             # -- admission: prefill queued requests into freed slots --------
+            admitted = 0
             if queue and self._admission_open(slots):
                 for s in range(B):
                     if not queue or slots[s] is not None:
@@ -409,34 +599,61 @@ class Engine:
                     # cache write at plen + k - 2 <= max_len - 1
                     budget = min(r.max_new_tokens, self.max_len - plen + 1)
                     if self.paged:
+                        if camp is not None:
+                            inj = camp.draw("admit/oom", kinds=("oom",))
+                            if inj is not None:
+                                # injected pool starvation rides the normal
+                                # backpressure path: the request just waits
+                                camp.resolve(inj, "backpressure")
+                                break
                         blocks = reserve(r, budget)
                         if blocks is None:
                             if not any(x is not None for x in slots):
-                                raise RuntimeError(
+                                try:
+                                    alloc.check()
+                                except flt.PoolIntegrityFault:
+                                    # a corrupted allocator can fake
+                                    # exhaustion: repair, retry next round
+                                    alloc, cache = rebuild_pool()
+                                    if camp is not None:
+                                        camp.resolve_kind("pool", "rebuilt")
+                                    break
+                                raise flt.AdmissionImpossible(
                                     f"paged KV pool of {self.num_blocks} "
                                     f"blocks cannot ever admit a "
                                     f"{plen}-token prompt with budget "
-                                    f"{budget}; raise num_blocks")
+                                    f"{budget}; raise num_blocks",
+                                    num_blocks=self.num_blocks,
+                                    blocks_needed=-(-(plen + budget - 1)
+                                                    // bs),
+                                    available_blocks=alloc.available(),
+                                    live_blocks=alloc.live_blocks())
                             break  # backpressure: wait for a slot to finish
                         slot_blocks[s] = blocks
                         tables[s, :] = 0
                         tables[s, :len(blocks)] = blocks
                         tables_dev.clear()
                     queue.popleft()
-                    slots[s] = _Slot(request=r, budget=budget)
+                    admitted += 1
+                    out = admit_prefill(plen, r.prompt)
+                    if out is None:
+                        # transient faults exhausted the retry budget: this
+                        # request alone fails; its reservation is returned
+                        r.out_tokens = np.asarray([], np.int32)
+                        r.finish_reason = "error"
+                        if self.paged:
+                            for bid in slot_blocks[s]:
+                                alloc.free(bid)
+                            slot_blocks[s] = []
+                            tables[s, :] = 0
+                            tables_dev.clear()
+                        continue
+                    logits1, row = out
+                    slots[s] = _Slot(request=r, budget=budget,
+                                     t0=time.monotonic())
                     seeds[s] = r.rng_seed if r.rng_seed is not None else rid
                     temps[s] = r.temperature
                     pos[s] = plen
-                    lp = min(self.max_len,
-                             -(-plen // self.prefill_bucket)
-                             * self.prefill_bucket)
-                    tokens = np.zeros((1, lp), np.int32)
-                    tokens[0, :plen] = r.prompt
-                    mask = np.zeros((1, lp), bool)
-                    mask[0, :plen] = True
-                    logits1, row = self._prefill(
-                        self.params, jnp.asarray(tokens), jnp.asarray(mask),
-                        jnp.asarray(plen - 1, jnp.int32))
                     if self.paged:
                         # land the prompt's blocks in the pool (a shared hit
                         # is rewritten with bit-identical K/V: same tokens,
@@ -447,7 +664,7 @@ class Engine:
                             jnp.asarray(slot_blocks[s][:nt], jnp.int32))
                     else:
                         cache = self._insert(cache, row, s)
-                    first = self._sample(
+                    first, _ = self._sample(
                         logits1, self.base_key,
                         jnp.asarray(seeds[s:s + 1]),
                         jnp.zeros(1, jnp.int32),
@@ -455,34 +672,78 @@ class Engine:
                     record(s, int(np.asarray(first)[0]))
             active = [s for s in range(B) if slots[s] is not None]
             if not active:
-                continue  # everything admitted this round finished instantly
+                # everything admitted this round finished instantly, or
+                # admission backpressured with an empty pool. The stall
+                # backstop turns a scheduler that stopped making progress
+                # into a typed fatal instead of a silent infinite loop.
+                stall = 0 if admitted else stall + 1
+                if stall > _STALL_LIMIT and queue:
+                    raise flt.SchedulerStall(
+                        f"no admission progress for {stall} rounds with "
+                        f"{len(queue)} request(s) queued and no active slot",
+                        queued=len(queue), rounds=rounds)
+                continue
+            stall = 0
             # -- one lockstep decode step over the pool ---------------------
             # Free rows ride along at a clamped offset; their writes land in
             # rows that are fully overwritten at the next insert (contiguous)
             # or in reserved garbage block 0 (paged) and their samples are
-            # never recorded (active-slot masking).
+            # never recorded (active-slot masking). A decode step rewrites
+            # the same cache positions with the same values, so the numeric
+            # retry below can simply re-run it.
             steps = np.array([len(slots[s].generated) if slots[s] else 0
                               for s in range(B)], np.int32)
             idx = np.where([slots[s] is not None for s in range(B)], pos, 0)
-            if self.paged:
-                # table width follows the deepest active row; dead rows are
-                # all-zero (garbage) tables. Shape-driven retrace only.
-                w = max(int(pos[s]) // bs + 1 for s in active)
-                if w not in tables_dev:
-                    tables_dev[w] = jnp.asarray(tables[:, :w])
-                logits, cache = self._paged_decode(
-                    self.params, cache, jnp.asarray(tok)[:, None],
-                    jnp.asarray(idx, jnp.int32), tables_dev[w])
-            else:
-                logits, cache = self._decode(
-                    self.params, cache, jnp.asarray(tok)[:, None],
-                    jnp.asarray(idx, jnp.int32))
-            nxt = np.asarray(self._sample(
-                logits, self.base_key, jnp.asarray(seeds),
-                jnp.asarray(steps), jnp.asarray(temps)))
+            for attempt in range(self.numeric_retries + 1):
+                if self.paged:
+                    # table width follows the deepest active row; dead rows
+                    # are all-zero (garbage) tables. Shape-driven retrace.
+                    w = max(int(pos[s]) // bs + 1 for s in active)
+                    if w not in tables_dev:
+                        tables_dev[w] = jnp.asarray(tables[:, :w])
+                    logits, cache = self._paged_decode(
+                        self.params, cache, jnp.asarray(tok)[:, None],
+                        jnp.asarray(idx, jnp.int32), tables_dev[w])
+                else:
+                    logits, cache = self._decode(
+                        self.params, cache, jnp.asarray(tok)[:, None],
+                        jnp.asarray(idx, jnp.int32))
+                num_inj = None
+                if camp is not None:
+                    num_inj = camp.draw("decode/numeric",
+                                        kinds=("numeric",), op="decode")
+                    if num_inj is not None:
+                        logits = camp.corrupt_rows(logits, active, num_inj)
+                nxt_dev, bad_dev = self._sample(
+                    logits, self.base_key, jnp.asarray(seeds),
+                    jnp.asarray(steps), jnp.asarray(temps))
+                nxt = np.asarray(nxt_dev)
+                bad = np.asarray(bad_dev)
+                bad_rows = [s for s in active if bad[s]]
+                if not bad_rows:
+                    if camp is not None and num_inj is not None:
+                        camp.resolve(num_inj, "retried")  # unreachable guard
+                    break
+                last = attempt == self.numeric_retries
+                if camp is not None and num_inj is not None:
+                    camp.resolve(num_inj, "row_failed" if last else "retried")
+                if last:
+                    # persistent NaN on these rows: fail them alone, keep
+                    # their generated-so-far tokens, never record this step
+                    for s in bad_rows:
+                        finish(s, "error")
+                    break
+                time.sleep(min(self.retry_backoff_s * (2 ** attempt), 0.05))
             for s in active:
+                if slots[s] is None:
+                    continue  # failed/expired rows were closed above
                 pos[s] += 1
                 record(s, int(nxt[s]))
+        if camp is not None:
+            # the pool dies with the loop: any still-latent corruption from a
+            # last-round finish is discarded wholesale — the degenerate
+            # rebuild — so the accounting never shows a swallowed fault
+            camp.resolve_kind("pool", "rebuilt")
         return requests
 
 

@@ -30,6 +30,8 @@ import collections
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.resilience.errors import PoolIntegrityFault, TransientFault
+
 DEFAULT_BLOCK_SIZE = 16
 GARBAGE_BLOCK = 0
 
@@ -39,8 +41,13 @@ GARBAGE_BLOCK = 0
 PrefixKey = Tuple[Optional[tuple], Tuple[int, ...]]
 
 
-class BlockOOM(RuntimeError):
-    """The pool cannot satisfy an allocation; admission must back off."""
+class BlockOOM(TransientFault):
+    """The pool cannot satisfy an allocation; admission must back off.
+
+    A :class:`repro.resilience.errors.TransientFault` (still a
+    ``RuntimeError`` through the taxonomy base): pool pressure is the
+    canonical recoverable condition — the engine answers with bounded
+    backpressure, never an abort."""
 
 
 def prefix_chain(tokens: Sequence[int], block_size: int) -> List[PrefixKey]:
@@ -169,18 +176,30 @@ class BlockAllocator:
         return self.live_blocks() * words_per_block
 
     def check(self) -> None:
-        """Invariant check for tests: every non-reserved block is in exactly
-        one of {free, live, evictable}, and key maps are mutually inverse."""
+        """Invariant check: every non-reserved block is in exactly one of
+        {free, live, evictable}, and key maps are mutually inverse. Raises
+        :class:`PoolIntegrityFault` (transient: the engine rebuilds the
+        pool from host-side request state) with occupancy diagnostics."""
         free = set(self._free)
         live = set(self._rc)
         evict = set(self._evictable)
-        assert not (free & live) and not (free & evict) and not (live & evict)
-        assert free | live | evict == (
-            set(range(self.num_blocks)) - set(self.reserved))
-        assert all(rc > 0 for rc in self._rc.values())
-        assert {k: b for b, k in self._key_of.items()} == self._block_of
-        assert all(b in self._rc or b in self._evictable
-                   for b in self._key_of)
+        problems: List[str] = []
+        if (free & live) or (free & evict) or (live & evict):
+            problems.append("a block is in two states at once")
+        if free | live | evict != (
+                set(range(self.num_blocks)) - set(self.reserved)):
+            problems.append("free|live|evictable does not partition the pool")
+        if not all(rc > 0 for rc in self._rc.values()):
+            problems.append("non-positive refcount on a live block")
+        if {k: b for b, k in self._key_of.items()} != self._block_of:
+            problems.append("prefix-key maps are not mutually inverse")
+        if not all(b in self._rc or b in self._evictable
+                   for b in self._key_of):
+            problems.append("a keyed block is neither live nor evictable")
+        if problems:
+            raise PoolIntegrityFault(
+                "; ".join(problems), num_blocks=self.num_blocks,
+                free=len(free), live=len(live), evictable=len(evict))
 
 
 # ---------------------------------------------------------------------------

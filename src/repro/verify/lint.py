@@ -21,6 +21,12 @@ Source rules (AST, so prose in comments/docstrings never trips them):
           one. Casting the *final store* to the output dtype is fine; the
           rule only fires when the cast target is a narrow dtype literal
           (bfloat16/float16/int8/fp8), not e.g. ``o_ref.dtype``.
+  VRF014  (repro/{ops,serving,distributed}/ only) ``raise RuntimeError`` —
+          runtime layers raise the ``repro.resilience.errors`` taxonomy
+          (transient vs fatal, diagnostics attached) so handlers can route
+          on recoverability; a bare RuntimeError is unclassifiable.
+          Re-raises (``raise`` with no exception) and other exception
+          types are untouched.
 
 Registry rules (imported live, so they track what's actually registered):
 
@@ -112,10 +118,25 @@ def _narrow_dtype_literal(node: ast.AST) -> Optional[str]:
 
 
 class _Checker(ast.NodeVisitor):
-    def __init__(self, path: Path, rel: str, in_kernels: bool):
+    def __init__(self, path: Path, rel: str, in_kernels: bool,
+                 in_runtime: bool = False):
         self.rel = rel
         self.in_kernels = in_kernels
+        self.in_runtime = in_runtime
         self.found: List[Violation] = []
+
+    def visit_Raise(self, node: ast.Raise) -> None:
+        if self.in_runtime and node.exc is not None:
+            raised = node.exc
+            if isinstance(raised, ast.Call):
+                raised = raised.func
+            if _terminal_name(raised) == "RuntimeError":
+                self.found.append(Violation(
+                    "VRF014", self.rel, node.lineno,
+                    "bare RuntimeError in a runtime layer — raise a "
+                    "repro.resilience.errors fault (transient/fatal "
+                    "classified, diagnostics attached)"))
+        self.generic_visit(node)
 
     def visit_Call(self, node: ast.Call) -> None:
         callee = _terminal_name(node.func)
@@ -155,7 +176,11 @@ def lint_file(path: Path, repo_root: Path) -> List[Violation]:
         tree = ast.parse(path.read_text(), filename=rel)
     except SyntaxError as e:  # pragma: no cover - broken file
         return [Violation("VRF000", rel, e.lineno or 0, f"syntax error: {e.msg}")]
-    checker = _Checker(path, rel, in_kernels="kernels" in path.parts)
+    parts = set(path.parts)
+    checker = _Checker(
+        path, rel, in_kernels="kernels" in parts,
+        in_runtime="repro" in parts
+        and bool(parts & {"ops", "serving", "distributed"}))
     checker.visit(tree)
     return checker.found
 

@@ -15,6 +15,10 @@ metadata and asserts the static checks catch it:
     re-fetch on every reduction step instead of once — the classic
     dequantize-in-the-loop bug. Totals move (counted > words_fn), so the
     counted-vs-measured exactness check must flag it.
+  * ``fault_swallowed``     a handler catches an injected NumericFault and
+    silently eats it — no retry, no row failure, no record. The campaign's
+    resolution accounting (``FaultCampaign.unresolved`` /
+    ``verify_accounted``) must flag the swallowed injection.
 
 ``run_seeded_mutants()`` returns ``(name, caught, detail)`` triples;
 ``scripts/verify.py --mutants`` (and the CI verify job) fail unless every
@@ -117,11 +121,35 @@ def scale_applied_twice() -> Tuple[bool, str]:
     return caught, "; ".join(report.problems[:2]) or "not detected"
 
 
+def fault_swallowed() -> Tuple[bool, str]:
+    """A fault handler that catches an injected NumericFault and silently
+    swallows it — the recovery bug the resolution accounting exists for.
+    Every legitimate handler stamps ``Injection.resolution`` (retried /
+    row_failed / degraded / ...); this one stamps nothing, so the campaign
+    must report the injection as unresolved."""
+    from repro.resilience.errors import NumericFault
+    from repro.resilience.faults import FaultCampaign
+
+    camp = FaultCampaign(seed=0, rate=1.0, kinds=("numeric",), max_faults=1)
+    inj = camp.draw("dispatch/conv2d", op="conv2d")
+    assert inj is not None, "rate-1.0 campaign failed to inject"
+    try:
+        raise camp.fault_for(inj, op="conv2d", backend="pallas")
+    except NumericFault:
+        pass  # the mutant: no resolve(), no retry, no row failure
+    leaks = camp.unresolved()
+    caught = bool(leaks)
+    return caught, (f"{len(leaks)} unresolved injection(s): "
+                    f"{leaks[0].kind} at {leaks[0].site}" if caught
+                    else "not detected")
+
+
 MUTANTS: Tuple[Tuple[str, Callable[[], Tuple[bool, str]]], ...] = (
     ("halo_off_by_one", halo_off_by_one),
     ("dropped_dma_wait", dropped_dma_wait),
     ("same_slot_prefetch", same_slot_prefetch),
     ("scale_applied_twice", scale_applied_twice),
+    ("fault_swallowed", fault_swallowed),
 )
 
 

@@ -132,7 +132,7 @@ def test_dangling_start_is_h5():
 
 def test_all_seeded_mutants_are_caught():
     results = run_seeded_mutants()
-    assert len(results) == 4
+    assert len(results) == 5
     escaped = [name for name, caught, _ in results if not caught]
     assert not escaped, f"mutants escaped the auditor: {escaped}"
 
