@@ -17,7 +17,7 @@ import time
 
 from repro.core.conv_model import INT8_ACC32, BF16_ACC32, resnet50_layers
 from repro.core.tiling import Blocking
-from repro.plan import GEMMINI, TPU_V5E, ConvSpec, plan
+from repro.plan import GEMMINI, TPU_V5E, ConvSpec, Planner
 
 
 def vendor_tiling(shape, mem) -> Blocking:
@@ -38,7 +38,7 @@ def run(csv_rows: list) -> None:
         for lname, s in resnet50_layers(1000).items():
             s = s.with_precision(prec)
             t0 = time.perf_counter()
-            ours = plan(ConvSpec.from_shape(s), target)
+            ours = Planner(target).plan(ConvSpec.from_shape(s))
             dt_us = (time.perf_counter() - t0) * 1e6
             vend = vendor_tiling(s, mem)
             ours_v, vend_v = ours.comm_volume, vend.comm_volume()

@@ -15,7 +15,7 @@ from repro import ops
 from repro.core.conv_model import Precision
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.matmul import matmul as matmul_pallas
-from repro.plan import MatmulSpec, TPU_V5E, clear_plan_cache, plan
+from repro.plan import MatmulSpec, Planner, TPU_V5E
 
 XLA = ops.ExecutionContext(target=TPU_V5E, backend="xla")
 PALLAS = ops.ExecutionContext(target=TPU_V5E, backend="pallas")
@@ -78,9 +78,9 @@ def run(csv_rows: list) -> None:
                          f"gflops={flops / us_x / 1e3:.1f}"))
         # the unified planner: cold solve time + the plan the kernel consumes
         spec = MatmulSpec(m, n, k, prec=Precision(0.5, 0.5, 1.0))
-        clear_plan_cache()
+        Planner.cache.clear()
         t0 = time.perf_counter()
-        ep = plan(spec, TPU_V5E)
+        ep = Planner(TPU_V5E).plan(spec)
         plan_us = (time.perf_counter() - t0) * 1e6
         csv_rows.append((f"plan/matmul/{m}x{n}x{k}", f"{plan_us:.0f}",
                          f"tiles={ep.tiles} eff={ep.efficiency:.2f}"))

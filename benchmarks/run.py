@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV:
   plan/*     - unified-planner solve times (repro.plan)
   kernel/*   - Pallas/XLA kernel micro-timings
   conv/*     - measured HBM words: LP-tiled conv vs Im2Col vs Thm 2.1 bound
+  autotune/* - measured frontier search: tuned vs analytic plan wall time
   dist/*     - measured inter-device words: halo-exchange conv vs all-gather
                vs the Thm 2.2/2.3 bound (live rows need the 8-device mesh)
   serving/*  - continuous-batching vs wave-lockstep serving throughput
@@ -35,15 +36,15 @@ def main(argv=None) -> None:
                          "(e.g. 'fig4' or 'fig4,serving')")
     args = ap.parse_args(argv)
 
-    from . import (conv_bench, dist_bench, fig2_single_processor,
-                   fig3_parallel, fig4_gemmini_tiling, kernel_bench,
-                   roofline_table, serving_bench)
+    from . import (autotune_bench, conv_bench, dist_bench,
+                   fig2_single_processor, fig3_parallel, fig4_gemmini_tiling,
+                   kernel_bench, roofline_table, serving_bench)
 
     only = [s for s in (args.only or "").split(",") if s]
     rows = [("name", "us_per_call", "derived")]
     for mod in (fig2_single_processor, fig3_parallel, fig4_gemmini_tiling,
-                kernel_bench, conv_bench, dist_bench, serving_bench,
-                roofline_table):
+                kernel_bench, conv_bench, autotune_bench, dist_bench,
+                serving_bench, roofline_table):
         if only and not any(s in mod.__name__ for s in only):
             continue
         try:

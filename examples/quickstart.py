@@ -22,7 +22,7 @@ from repro.core import (BF16_ACC32, FP32, ConvShape,
 from repro.core.algorithms import single_processor_volumes
 from repro.kernels.conv2d import conv2d
 from repro.kernels.ref import conv2d_ref
-from repro.plan import ConvSpec, TPU_V5E, plan
+from repro.plan import ConvSpec, Planner, TPU_V5E
 
 
 def main():
@@ -45,7 +45,7 @@ def main():
     print(f"  memory-independent "
           f"{memory_independent_parallel_bound(shape, 256).value:.4e}\n")
 
-    ep = plan(ConvSpec.from_shape(shape), target)
+    ep = Planner(target).plan(ConvSpec.from_shape(shape))
     print(f"ExecutionPlan for {target.name}: tile={ep.conv_tile()}")
     print(f"  kernel tiles (bN, b_cI, b_cO, b_hO, b_wO) = {ep.tiles}, "
           f"grid = {ep.grid}")
@@ -62,9 +62,9 @@ def main():
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (2, 8, 16, 16), jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(1), (16, 8, 3, 3), jnp.float32)
-    small = plan(ConvSpec(N=2, c_I=8, c_O=16, w_O=14, h_O=14, w_F=3, h_F=3,
-                          prec=FP32),  # matches the f32 arrays below
-                 target)
+    small = Planner(target).plan(
+        ConvSpec(N=2, c_I=8, c_O=16, w_O=14, h_O=14, w_F=3, h_F=3,
+                 prec=FP32))  # matches the f32 arrays below
     got = conv2d(x, w, plan=small)
     want = conv2d_ref(x, w)
     err = float(jnp.max(jnp.abs(got - want)))

@@ -65,6 +65,24 @@ def hbm_seconds(words: float, chips: int = 1) -> float:
     use (``memory_s = bytes / (chips * HBM_BW)``)."""
     return words_to_bytes(words) / (chips * HBM_BW)
 
+
+# Per-DMA-transfer issue latency (descriptor setup + dispatch), the alpha of
+# the alpha-beta model below. ~2us is the order of a TPU async-copy issue; the
+# exact constant only has to rank tile candidates, not predict wall clock.
+DMA_SETUP_SECONDS = 2e-6
+
+
+def alpha_beta_seconds(words: float, transfers: float, chips: int = 1
+                       ) -> float:
+    """Latency + bandwidth (alpha-beta) roofline for one kernel launch:
+    ``hbm_seconds(words)`` (the bandwidth term every words_fn prices) plus
+    ``transfers`` DMA issues at ``DMA_SETUP_SECONDS`` each. This is the
+    offline cost model of ``repro.plan.autotune``: the blocking LP minimizes
+    the bandwidth term alone, so near-bound tile candidates that trade a few
+    percent more words for far fewer (bigger) DMA transfers rank faster here
+    — exactly the frontier a measured autotuner exists to explore."""
+    return hbm_seconds(words, chips) + float(transfers) * DMA_SETUP_SECONDS
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "s32": 4, "u32": 4, "s64": 8, "u64": 8,

@@ -40,7 +40,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.conv_model import Precision, round_up
 from repro.plan import (ConvSpec, ExecutionPlan, HardwareTarget,
-                        resolve_kernel_plan)
+                        resolve_kernel_plan, warn_legacy_kernel_kwargs)
 
 
 def _conv_spec(N: int, c_I: int, c_O: int, h_O: int, w_O: int, h_F: int,
@@ -143,6 +143,7 @@ def conv2d(
     w: jax.Array,  # (c_O, c_I, h_F, w_F)
     stride: Tuple[int, int] = (1, 1),
     out_dtype=jnp.float32,
+    ctx=None,  # ExecutionContext (duck-typed: .target/.interpret/.autotune)
     tiles: Optional[Sequence[int]] = None,
     plan: Optional[ExecutionPlan] = None,
     target: Optional[HardwareTarget] = None,
@@ -150,11 +151,17 @@ def conv2d(
 ) -> jax.Array:
     """Direct convolution with paper-LP tiling. VALID padding.
 
-    Tiles come from (in priority order) an explicit legacy ``tiles`` tuple —
-    (bN, b_cI, b_cO) or (bN, b_cI, b_cO, b_hO, b_wO) — an ``ExecutionPlan``
-    (``repro.plan.plan``), or a fresh plan solved for ``target`` (default
-    TPU_V5E). ``interpret`` defaults to the target's policy (True everywhere
-    until a real TPU backend is attached)."""
+    Execution policy rides ``ctx`` (an ``repro.ops.ExecutionContext``:
+    target, interpret override, autotune policy). Tiles come from (in
+    priority order) an explicit legacy ``tiles`` tuple — (bN, b_cI, b_cO) or
+    (bN, b_cI, b_cO, b_hO, b_wO) — an explicit ``plan``
+    (:class:`repro.plan.ExecutionPlan`, the dispatcher/autotuner handoff),
+    or a fresh plan resolved for the context's target (default TPU_V5E;
+    tuned winner when one is stored). ``target=``/``tiles=`` are legacy
+    (DeprecationWarning; lint VRF015); ``interpret`` defaults to the
+    target's policy (True everywhere until a real TPU backend is attached).
+    """
+    warn_legacy_kernel_kwargs("conv2d", target=target, tiles=tiles)
     N, c_I, H, W = x.shape
     c_O, c_I2, h_F, w_F = w.shape
     assert c_I == c_I2
@@ -164,7 +171,7 @@ def conv2d(
     in_bits = jnp.dtype(x.dtype).itemsize * 8
     t, interpret = resolve_kernel_plan(
         _conv_spec(N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, in_bits),
-        plan=plan, target=target, tiles=tiles, interpret=interpret)
+        plan=plan, target=target, tiles=tiles, interpret=interpret, ctx=ctx)
     t = _normalize_tiles(t, h_O, w_O)
     bN, b_cI, b_cO, bh, bw = t
     (Np, cIp, cOp, hOp, wOp, Hp, Wp, h_in, w_in,
@@ -211,6 +218,7 @@ def conv2d_shard(
     w: jax.Array,  # (c_O, b_cI, h_F, w_F)
     stride: Tuple[int, int] = (1, 1),
     out_dtype=jnp.float32,
+    ctx=None,
     plan: Optional[ExecutionPlan] = None,
     target: Optional[HardwareTarget] = None,
     interpret: Optional[bool] = None,
@@ -219,6 +227,12 @@ def conv2d_shard(
     as :func:`conv2d`, but the input must be an exact halo window (the shape
     each shard assembles after its ``ppermute`` exchanges — no dead rows).
     Plans resolve for the *local* shape, so each shard tiles its own block."""
+    warn_legacy_kernel_kwargs("conv2d_shard", target=target)
+    if ctx is None and (target is not None or interpret is not None):
+        # absorb the legacy kwargs here so the inner conv2d doesn't re-warn
+        from types import SimpleNamespace
+        ctx = SimpleNamespace(target=target, interpret=interpret,
+                              autotune=None)
     N, c_I, H, W = x.shape
     _, _, h_F, w_F = w.shape
     sh, sw = stride
@@ -227,8 +241,8 @@ def conv2d_shard(
             f"shard-local conv window ({H}, {W}) is not exact for filter "
             f"({h_F}, {w_F}) stride ({sh}, {sw}): halo rows were "
             "mis-exchanged upstream")
-    return conv2d(x, w, stride=stride, out_dtype=out_dtype, plan=plan,
-                  target=target, interpret=interpret)
+    return conv2d(x, w, stride=stride, out_dtype=out_dtype, ctx=ctx,
+                  plan=plan)
 
 
 def conv2d_access_plan(

@@ -55,10 +55,21 @@ def conv2d_im2col(
     w: jax.Array,  # (c_O, c_I, h_F, w_F)
     stride: Tuple[int, int] = (1, 1),
     out_dtype=jnp.float32,
+    ctx=None,
     target: Optional[HardwareTarget] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Im2Col convolution (VALID padding): patches -> LP-tiled Pallas GEMM."""
+    """Im2Col convolution (VALID padding): patches -> LP-tiled Pallas GEMM.
+    Execution policy rides ``ctx``; ``target=`` is legacy (DeprecationWarning;
+    lint VRF015)."""
+    from repro.plan import warn_legacy_kernel_kwargs
+
+    warn_legacy_kernel_kwargs("conv2d_im2col", target=target)
+    if ctx is None and (target is not None or interpret is not None):
+        # absorb the legacy kwargs so the inner matmul doesn't re-warn
+        from types import SimpleNamespace
+        ctx = SimpleNamespace(target=target, interpret=interpret,
+                              autotune=None)
     N, c_I, H, W = x.shape
     c_O, c_I2, h_F, w_F = w.shape
     assert c_I == c_I2
@@ -67,8 +78,8 @@ def conv2d_im2col(
     w_O = (W - w_F) // sw + 1
     patches = im2col_patches(x, h_F, w_F, stride)
     wmat = w.reshape(c_O, c_I * h_F * w_F).T  # (k, c_O)
-    out = matmul(patches, wmat, out_dtype=out_dtype, target=target,
-                 interpret=interpret)  # (N*h_O*w_O, c_O)
+    out = matmul(patches, wmat, out_dtype=out_dtype,
+                 ctx=ctx)  # (N*h_O*w_O, c_O)
     return out.reshape(N, h_O, w_O, c_O).transpose(0, 3, 1, 2)
 
 

@@ -30,7 +30,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.conv_model import Precision, round_up
 from repro.plan import (ExecutionPlan, HardwareTarget, MatmulSpec,
-                        resolve_kernel_plan)
+                        resolve_kernel_plan, warn_legacy_kernel_kwargs)
 
 
 def _matmul_spec(m: int, n: int, k: int, in_bits: int) -> MatmulSpec:
@@ -83,6 +83,7 @@ def matmul(
     a: jax.Array,  # (m, k)
     b: jax.Array,  # (k, n)
     out_dtype=jnp.float32,
+    ctx=None,  # ExecutionContext (duck-typed: .target/.interpret/.autotune)
     tiles: Tuple[int, int, int] | None = None,
     plan: Optional[ExecutionPlan] = None,
     target: Optional[HardwareTarget] = None,
@@ -90,15 +91,19 @@ def matmul(
 ) -> jax.Array:
     """C[m,n] = A @ B with LP-chosen VMEM tiling.
 
-    Tiles come from (in priority order) an explicit legacy ``tiles`` triple,
-    an ``ExecutionPlan``, or a fresh plan solved for ``target``."""
+    Execution policy rides ``ctx``. Tiles come from (in priority order) an
+    explicit legacy ``tiles`` triple, an explicit ``plan`` (the dispatcher/
+    autotuner handoff), or a fresh plan resolved for the context's target
+    (tuned winner when one is stored). ``target=``/``tiles=`` are legacy
+    (DeprecationWarning; lint VRF015)."""
+    warn_legacy_kernel_kwargs("matmul", target=target, tiles=tiles)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, f"inner dims mismatch: {k} vs {k2}"
     in_bits = jnp.dtype(a.dtype).itemsize * 8
     (bm, bn, bk), interpret = resolve_kernel_plan(
         _matmul_spec(m, n, k, in_bits),
-        plan=plan, target=target, tiles=tiles, interpret=interpret)
+        plan=plan, target=target, tiles=tiles, interpret=interpret, ctx=ctx)
 
     mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
     if (mp, kp) != (m, k):

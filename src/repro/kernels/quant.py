@@ -39,7 +39,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.conv_model import Precision, round_up
 from repro.plan import (ConvSpec, ExecutionPlan, HardwareTarget, MatmulSpec,
-                        resolve_kernel_plan)
+                        resolve_kernel_plan, warn_legacy_kernel_kwargs)
 
 from .conv2d import _launch_geometry, _normalize_tiles
 
@@ -139,6 +139,7 @@ def conv2d_q(
     scale: jax.Array,  # (1, c_O) f32: folded s_x * s_w[c_O]
     stride: Tuple[int, int] = (1, 1),
     out_dtype=jnp.bfloat16,
+    ctx=None,  # ExecutionContext (duck-typed: .target/.interpret/.autotune)
     tiles: Optional[Sequence[int]] = None,
     plan: Optional[ExecutionPlan] = None,
     target: Optional[HardwareTarget] = None,
@@ -146,7 +147,10 @@ def conv2d_q(
 ) -> jax.Array:
     """Quantized direct convolution (VALID padding): int8 operand streams,
     f32 accumulation, one folded per-output-channel scale applied at the
-    store. Operands come from ``repro.quant.quantize_conv_operands``."""
+    store. Operands come from ``repro.quant.quantize_conv_operands``.
+    Execution policy rides ``ctx``; ``target=``/``tiles=`` are legacy
+    (DeprecationWarning; lint VRF015)."""
+    warn_legacy_kernel_kwargs("conv2d_q", target=target, tiles=tiles)
     N, c_I, H, W = x.shape
     c_O, c_I2, h_F, w_F = w.shape
     assert c_I == c_I2
@@ -157,7 +161,7 @@ def conv2d_q(
     t, interpret = resolve_kernel_plan(
         _conv_spec_q(N, c_I, c_O, h_O, w_O, h_F, w_F, sh, sw, x.dtype,
                      w.dtype, out_dtype),
-        plan=plan, target=target, tiles=tiles, interpret=interpret)
+        plan=plan, target=target, tiles=tiles, interpret=interpret, ctx=ctx)
     t = _normalize_tiles(t, h_O, w_O)
     bN, b_cI, b_cO, bh, bw = t
     (Np, cIp, cOp, hOp, wOp, Hp, Wp, h_in, w_in,
@@ -362,6 +366,7 @@ def matmul_q(
     b: jax.Array,  # (k, n) int8
     scale: jax.Array,  # (1, n) f32: folded s_a * s_b[n]
     out_dtype=jnp.bfloat16,
+    ctx=None,  # ExecutionContext (duck-typed: .target/.interpret/.autotune)
     tiles: Optional[Tuple[int, int, int]] = None,
     plan: Optional[ExecutionPlan] = None,
     target: Optional[HardwareTarget] = None,
@@ -369,14 +374,17 @@ def matmul_q(
 ) -> jax.Array:
     """Quantized GEMM: int8 A/B streams double-buffered over k, f32
     accumulator, folded per-column scale applied at the store. Operands come
-    from ``repro.quant.quantize_matmul_operands``."""
+    from ``repro.quant.quantize_matmul_operands``. Execution policy rides
+    ``ctx``; ``target=``/``tiles=`` are legacy (DeprecationWarning; lint
+    VRF015)."""
+    warn_legacy_kernel_kwargs("matmul_q", target=target, tiles=tiles)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, f"inner dims mismatch: {k} vs {k2}"
     assert scale.shape == (1, n), f"scale must be (1, {n}), got {scale.shape}"
     (bm, bn, bk), interpret = resolve_kernel_plan(
         _matmul_spec_q(m, n, k, a.dtype, b.dtype, out_dtype),
-        plan=plan, target=target, tiles=tiles, interpret=interpret)
+        plan=plan, target=target, tiles=tiles, interpret=interpret, ctx=ctx)
 
     mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
     if (mp, kp) != (m, k):

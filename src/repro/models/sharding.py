@@ -41,9 +41,9 @@ def gemm_sharding_plan(m: int, n: int, k: int, mesh: Mesh):
 
     Returns (plan, spec_A, spec_B, spec_C); specs cover the two matrix dims.
     This is the dynamic path behind the static rule tables below."""
-    from repro.plan import MatmulSpec, plan
+    from repro.plan import MatmulSpec, Planner
 
-    ep = plan(MatmulSpec(m, n, k), mesh_target(mesh))
+    ep = Planner(mesh_target(mesh)).plan(MatmulSpec(m, n, k))
     sp = ep.sharding
     return (ep, P(*sp.input_spec[:2]), P(*sp.filter_spec[:2]),
             P(*sp.output_spec[:2]))

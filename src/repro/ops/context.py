@@ -13,11 +13,18 @@ three inputs of that decision:
   * ``backend`` - an explicit backend override (``"xla"`` | ``"pallas"``).
                   ``None`` defers to the ``REPRO_BACKEND`` environment variable
                   and then to the target's own default;
-  * ``interpret`` - Pallas interpret-mode override (``None`` = the target's).
+  * ``interpret`` - Pallas interpret-mode override (``None`` = the target's);
+  * ``autotune`` - measured-autotune policy (``None``/``False`` = off,
+                  ``True`` = default :class:`repro.plan.AutotunePolicy`, or a
+                  policy instance). When set, plan resolution may run one
+                  frontier search per (op, target) and then serve the tuned
+                  winner from the TuningRecord store.
 
-Plans are resolved through the process-wide memoized cache in
-``repro.plan.planner`` (``ctx.plan(op)`` is the cache handle), so every
-consumer of one context converges on identical ``ExecutionPlan`` objects.
+Plans are resolved through ``repro.plan.resolve_plan`` — the one shared path
+(explicit plan > stored tuned plan > analytic LP plan) behind ``ctx.plan()``,
+``ops.explain`` and the kernels' ``resolve_kernel_plan`` — backed by the
+process-wide memoized cache in ``repro.plan.planner``, so every consumer of
+one context converges on identical ``ExecutionPlan`` objects.
 
 Backend resolution order: explicit ``ctx.backend`` > ``REPRO_BACKEND`` env var
 > the target default. (The PR-3 ``REPRO_USE_PALLAS`` env var is gone;
@@ -28,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Optional
+from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -74,6 +81,7 @@ class ExecutionContext:
     target: HardwareTarget = TPU_V5E
     backend: Optional[str] = None  # "xla" | "pallas" | None (resolve)
     interpret: Optional[bool] = None  # Pallas interpret override
+    autotune: Any = None  # None/False | True | repro.plan.AutotunePolicy
 
     # -- backend resolution ---------------------------------------------------
     def resolved_backend(self) -> str:
@@ -96,12 +104,20 @@ class ExecutionContext:
         return cls(target=target, backend=backend)
 
     # -- plan-cache handle ----------------------------------------------------
-    def plan(self, op):
+    def plan(self, op, explicit=None):
         """Resolve the ExecutionPlan for ``op`` on this context's target via
-        the process-wide memoized plan cache (``repro.plan.plan``)."""
-        from repro.plan import plan as _plan
+        the shared resolution path (explicit > tuned > analytic), honoring
+        this context's autotune policy."""
+        return self.plan_with_source(op, explicit=explicit)[0]
 
-        return _plan(op, self.target)
+    def plan_with_source(self, op, explicit=None) -> Tuple[Any, str]:
+        """``(plan, source)`` with source one of ``"explicit"`` | ``"tuned"``
+        | ``"analytic"`` — the same tuple ``DispatchDecision.plan_source``
+        reports."""
+        from repro.plan import resolve_plan
+
+        return resolve_plan(op, self.target, explicit=explicit,
+                            autotune=self.autotune)
 
     # -- precision policy -----------------------------------------------------
     @property

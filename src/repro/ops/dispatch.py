@@ -64,6 +64,10 @@ class DispatchDecision:
     forced each fallback hop (empty when ``chosen == requested``); ``plan``
     the ExecutionPlan the chosen entry consumed (None for closed-form ops and
     for XLA entries, which delegate tiling to the compiler);
+    ``plan_source`` how that plan was obtained through the shared resolution
+    path (``repro.plan.resolve_plan``): ``"explicit"`` (caller passed one),
+    ``"tuned"`` (the measured autotuner's stored winner), or ``"analytic"``
+    (the LP optimum — also the value when the entry consumes no plan);
     ``measured_words`` the words the chosen kernel's launch geometry moves
     for this call (None when the entry is not instrumented) — HBM words
     (32-bit) for single-device ops, *inter-device* words per device for the
@@ -93,6 +97,7 @@ class DispatchDecision:
     chosen: str
     missing: Tuple[str, ...] = ()
     plan: Optional[Any] = None
+    plan_source: str = "analytic"  # "explicit" | "tuned" | "analytic"
     measured_words: Optional[float] = None
     audited: Optional[float] = None
     degraded: bool = False
@@ -132,6 +137,13 @@ class DispatchDecision:
         else:
             msg = (f"{self.op}: {self.requested!r} lacks "
                    f"{', '.join(self.missing)}; fell back to {self.chosen!r}")
+        if self.plan is not None:
+            msg += f"; {self.plan_source} plan"
+            tuned = getattr(self.plan, "tuned", None)
+            if tuned is not None:
+                msg += (f" ({tuned.candidates_timed} candidates timed via "
+                        f"{tuned.source}, winner {tuned.winner_seconds:.2e}s "
+                        f"vs analytic)")
         if self.measured_words is not None:
             kind = ("inter-device" if self.op.endswith("_dist") else "HBM")
             msg += f"; measured {self.measured_words:.3e} {kind} words"
@@ -277,15 +289,23 @@ def _resolve_entry(op: str, ctx: ExecutionContext, dtype: Optional[str],
 def _attach_plan_and_words(entry: OpEntry, decision: DispatchDecision,
                            ctx: ExecutionContext,
                            spec_args: Optional[tuple],
-                           spec_kw: Optional[dict]) -> DispatchDecision:
-    """Solve the entry's LP plan and measured-HBM-words counter (both need
-    only shapes/dtypes, so tracers and ShapeDtypeStructs work)."""
+                           spec_kw: Optional[dict],
+                           plan: Optional[Any] = None) -> DispatchDecision:
+    """Resolve the entry's plan — explicit ``plan`` > stored tuned winner >
+    analytic LP, via the shared ``ctx.plan_with_source`` path — and its
+    measured-HBM-words counter (both need only shapes/dtypes, so tracers and
+    ShapeDtypeStructs work)."""
     if spec_args is None:
         return decision
     kw = spec_kw or {}
-    if entry.spec_fn is not None:
-        decision = dataclasses.replace(
-            decision, plan=ctx.plan(entry.spec_fn(*spec_args, **kw)))
+    if plan is not None:
+        decision = dataclasses.replace(decision, plan=plan,
+                                       plan_source="explicit")
+    elif entry.spec_fn is not None:
+        resolved, source = ctx.plan_with_source(entry.spec_fn(*spec_args,
+                                                              **kw))
+        decision = dataclasses.replace(decision, plan=resolved,
+                                       plan_source=source)
     if entry.words_fn is not None:
         decision = dataclasses.replace(
             decision,
@@ -316,8 +336,10 @@ def _maybe_audit(entry: OpEntry, decision: DispatchDecision,
 def resolve(op: str, ctx: Optional[ExecutionContext] = None,
             dtype: Optional[str] = None, needs: Tuple[str, ...] = (),
             spec_args: Optional[tuple] = None, spec_kw: Optional[dict] = None,
-            audit: bool = False) -> Tuple[OpEntry, DispatchDecision]:
-    """Capability-resolve one call; solve the entry's LP plan and measured
+            audit: bool = False,
+            plan: Optional[Any] = None) -> Tuple[OpEntry, DispatchDecision]:
+    """Capability-resolve one call; resolve the entry's plan (explicit
+    ``plan=`` > tuned > analytic, stamped as ``plan_source``) and measured
     HBM-word counter if it declares them. ``audit=True`` additionally runs
     the ``repro.verify`` static auditor against the chosen entry's access
     plan (raising on any mismatch or hazard). Quarantine-aware (a runtime-
@@ -327,7 +349,8 @@ def resolve(op: str, ctx: Optional[ExecutionContext] = None,
     needs = tuple(needs)
     entry, decision = _resolve_entry(
         op, ctx, dtype, needs, shape_key=_shape_key(needs, spec_args, spec_kw))
-    decision = _attach_plan_and_words(entry, decision, ctx, spec_args, spec_kw)
+    decision = _attach_plan_and_words(entry, decision, ctx, spec_args,
+                                      spec_kw, plan=plan)
     decision = _maybe_audit(entry, decision, ctx, spec_args, spec_kw, audit)
     for log in _TRACE:
         log.append(decision)
@@ -338,18 +361,22 @@ def explain(op: str, ctx: Optional[ExecutionContext] = None,
             dtype: Optional[str] = None, needs: Tuple[str, ...] = (),
             spec_args: Optional[tuple] = None,
             spec_kw: Optional[dict] = None,
-            audit: bool = False) -> DispatchDecision:
+            audit: bool = False,
+            plan: Optional[Any] = None) -> DispatchDecision:
     """The decision ``resolve`` would make, without executing anything.
     ``spec_args``/``spec_kw`` mirror ``resolve`` so the reported plan and
     measured words are the ones the dispatched kernel would consume (e.g.
     conv2d needs stride=); ``jax.ShapeDtypeStruct`` spec_args work since
-    only shapes/dtypes are consulted. ``audit=True`` runs the static
-    communication auditor and stamps ``DispatchDecision.audited``."""
+    only shapes/dtypes are consulted. The decision's ``plan_source`` tells
+    tuned from analytic plans apart (and ``why()`` narrates the tuning
+    provenance). ``audit=True`` runs the static communication auditor and
+    stamps ``DispatchDecision.audited``."""
     ctx = default_context() if ctx is None else ctx
     needs = tuple(needs)
     entry, decision = _resolve_entry(
         op, ctx, dtype, needs, shape_key=_shape_key(needs, spec_args, spec_kw))
-    decision = _attach_plan_and_words(entry, decision, ctx, spec_args, spec_kw)
+    decision = _attach_plan_and_words(entry, decision, ctx, spec_args,
+                                      spec_kw, plan=plan)
     return _maybe_audit(entry, decision, ctx, spec_args, spec_kw, audit)
 
 
@@ -357,8 +384,12 @@ def dispatch_call(op: str, ctx: ExecutionContext, dtype: Optional[str],
                   needs: Tuple[str, ...], spec_args: tuple,
                   spec_kw: Optional[dict] = None,
                   call_args: Optional[tuple] = None,
-                  call_kw: Optional[dict] = None):
+                  call_kw: Optional[dict] = None,
+                  plan: Optional[Any] = None):
     """Resolve AND execute one op call with runtime-failure fallback.
+    ``plan=`` forces an explicit ExecutionPlan onto the chosen entry (the
+    autotuner's candidate-timing path); omitted, the shared resolution path
+    picks tuned-then-analytic.
 
     The public op wrappers funnel through here: resolve (quarantine-aware,
     consuming probes), price the plan/words, run the entry — through the
@@ -378,7 +409,7 @@ def dispatch_call(op: str, ctx: ExecutionContext, dtype: Optional[str],
         entry, decision = _resolve_entry(op, ctx, dtype, needs,
                                          shape_key=key, probe=True)
         decision = _attach_plan_and_words(entry, decision, ctx,
-                                          spec_args, spec_kw)
+                                          spec_args, spec_kw, plan=plan)
 
         def runner(entry=entry, decision=decision):
             return entry.fn(ctx, decision.plan, *call_args, **call_kw)

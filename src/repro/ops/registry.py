@@ -738,8 +738,7 @@ register_backend(Backend(
 def _im2col_conv2d(ctx, plan, x, w, stride=(1, 1), out_dtype=jnp.float32):
     return _with_xla_vjp(
         lambda x_, w_: conv2d_im2col(x_, w_, stride=stride,
-                                     out_dtype=out_dtype, target=ctx.target,
-                                     interpret=ctx.interpret),
+                                     out_dtype=out_dtype, ctx=ctx),
         lambda x_, w_: ref.conv2d_ref(x_, w_, stride=stride,
                                       out_dtype=out_dtype), x, w)
 

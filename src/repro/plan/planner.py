@@ -1,14 +1,21 @@
-"""The single planning entry point: ``plan(op, target) -> ExecutionPlan``.
+"""The planning front door: ``Planner(target).plan(op) -> ExecutionPlan``.
 
 One discipline for the whole codebase (paper §3.2 eq. 6, §4.2, §5): solve the
 HBL-derived blocking LP against the target's memory-hierarchy model, refine to
 integers, then lower the solution to (a) Pallas tile/grid shapes and (b) — for
 multi-device targets — a mesh ``ShardingPlan`` with PartitionSpecs.
 
+:class:`Planner` is the single public entry point: ``.plan(op)`` resolves
+through the shared :func:`resolve_plan` path (explicit > tuned > analytic),
+``.autotune(op)`` runs the measured frontier search of ``repro.plan.autotune``
+and ``Planner.cache`` (a process-wide :class:`PlanCache`) saves/loads both the
+memoized plans and the autotuner's :class:`~repro.plan.autotune.TuningRecord`
+store. The PR-1 module-level functions (``plan``, ``save_plan_cache``,
+``load_plan_cache``, ``clear_plan_cache``, ``plan_cache_size``) remain as thin
+shims that emit ``DeprecationWarning``.
+
 Plans are memoized process-wide, keyed on the (op, target) value pair; this
 replaces the per-kernel ``functools.lru_cache``s the planners used to carry.
-The cache can be dumped to / restored from JSON for offline plan reuse
-(``save_plan_cache`` / ``load_plan_cache``).
 """
 
 from __future__ import annotations
@@ -16,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import threading
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.bounds import (attention_bound, combined_parallel_bound,
@@ -43,7 +51,11 @@ from .target import HardwareTarget, TPU_V5E
 # from the op's word-widths — quantized ops record int8 streams / bf16
 # stores so tools (roofline byte conversion, bench dumps) need not guess.
 # Older dumps load with dtypes=().
-PLAN_FORMAT_VERSION = 5
+# v6: plans may carry a ``tuned`` section ({source, candidates_timed,
+# winner_words, winner_seconds}) stamped by the measured autotuner
+# (``repro.plan.autotune``) — absent (None) on analytic plans and in every
+# older dump.
+PLAN_FORMAT_VERSION = 6
 
 
 def _width_dtype(width: float) -> str:
@@ -97,6 +109,35 @@ class ParallelSection:
 
 
 @dataclasses.dataclass(frozen=True)
+class TunedSection:
+    """The measured-autotune provenance a v6 plan carries (None = analytic).
+
+    ``source`` records how the winner was timed — ``"device"`` (best-of-k
+    wall clock through ``ops.dispatch_call``) or ``"roofline"`` (the offline
+    alpha-beta model ``analysis.roofline.alpha_beta_seconds``); ``winner_words``
+    is the winner's exact measured HBM words (== the plan's ``comm_volume``)
+    and ``winner_seconds`` its timed/modeled launch seconds."""
+
+    source: str  # "device" | "roofline"
+    candidates_timed: int
+    winner_words: float
+    winner_seconds: float
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"source": self.source,
+                "candidates_timed": self.candidates_timed,
+                "winner_words": self.winner_words,
+                "winner_seconds": self.winner_seconds}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TunedSection":
+        return cls(source=str(d["source"]),
+                   candidates_timed=int(d["candidates_timed"]),
+                   winner_words=float(d["winner_words"]),
+                   winner_seconds=float(d["winner_seconds"]))
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """Everything a consumer needs to execute one op on one target.
 
@@ -124,6 +165,10 @@ class ExecutionPlan:
     # output/accum), derived from the op's effective Precision. () in
     # pre-v5 dumps.
     dtypes: Tuple[Tuple[str, str], ...] = ()
+    # v6: measured-autotune provenance; None on analytic plans and in every
+    # pre-v6 dump. A tuned plan's tiles/grid/comm_volume are the frontier
+    # winner's, so consumers need not special-case it.
+    tuned: Optional[TunedSection] = None
 
     # -- views ---------------------------------------------------------------
     @property
@@ -212,6 +257,7 @@ class ExecutionPlan:
             "parallel": (None if self.parallel is None
                          else self.parallel.to_dict()),
             "dtypes": [list(kv) for kv in self.dtypes],
+            "tuned": None if self.tuned is None else self.tuned.to_dict(),
         }
         if self.sharding is not None:
             s = self.sharding
@@ -249,6 +295,9 @@ class ExecutionPlan:
         parallel = None
         if d.get("parallel") is not None:  # absent in v1/v2 dumps
             parallel = ParallelSection.from_dict(d["parallel"])
+        tuned = None
+        if d.get("tuned") is not None:  # absent in pre-v6 dumps
+            tuned = TunedSection.from_dict(d["tuned"])
         return cls(
             op=op_from_dict(d["op"]),
             target=HardwareTarget.from_dict(d["target"]),
@@ -262,6 +311,7 @@ class ExecutionPlan:
             parallel=parallel,
             dtypes=tuple((str(k), str(v))
                          for k, v in d.get("dtypes", [])),
+            tuned=tuned,
         )
 
     @classmethod
@@ -280,35 +330,86 @@ _CACHE_LOCK = threading.Lock()
 PLAN_CACHE_MAX = 1024
 
 
+class PlanCache:
+    """Facade over the process-wide plan memoizer *and* the autotuner's
+    TuningRecord store — one save/load/clear/size surface, reached as
+    ``Planner.cache`` (a process singleton: every instance views the same
+    state). The JSON dump is a ``{"format", "plans", "tuning"}`` dict;
+    pre-v6 dumps (a bare list of plan dicts) still load."""
+
+    def size(self) -> int:
+        """Number of memoized plans (analytic and materialized tuned)."""
+        with _CACHE_LOCK:
+            return len(_CACHE)
+
+    def clear(self) -> None:
+        """Drop every memoized plan and every tuning record. The autotune
+        search counter is *not* reset — re-searches stay observable across
+        a clear()/load() round trip."""
+        with _CACHE_LOCK:
+            _CACHE.clear()
+        from . import autotune as _autotune
+
+        _autotune.clear_records()
+
+    def save(self, path: str) -> int:
+        """Dump memoized plans + tuning records; returns entries written."""
+        from . import autotune as _autotune
+
+        with _CACHE_LOCK:
+            plans = list(_CACHE.values())
+        records = _autotune.records()
+        with open(path, "w") as f:
+            json.dump({"format": PLAN_FORMAT_VERSION,
+                       "plans": [p.to_dict() for p in plans],
+                       "tuning": [r.to_dict() for r in records]}, f, indent=1)
+        return len(plans) + len(records)
+
+    def load(self, path: str) -> int:
+        """Pre-populate plans + tuning records from a dump; returns entries
+        loaded. Restored tuning records make ``resolve_plan`` serve tuned
+        plans without re-searching (the zero-re-search serving contract)."""
+        with open(path) as f:
+            dump = json.load(f)
+        plan_dicts = dump if isinstance(dump, list) else dump.get("plans", [])
+        n = 0
+        with _CACHE_LOCK:
+            for d in plan_dicts:
+                p = ExecutionPlan.from_dict(d)
+                _CACHE.setdefault((p.op, p.target), p)
+                n += 1
+        if isinstance(dump, dict):
+            from . import autotune as _autotune
+
+            for d in dump.get("tuning", []):
+                _autotune.install_record(_autotune.TuningRecord.from_dict(d))
+                n += 1
+        return n
+
+
+def _warn_legacy(old: str, new: str) -> None:
+    warnings.warn(f"legacy planning API: {old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
+
+
 def clear_plan_cache() -> None:
-    with _CACHE_LOCK:
-        _CACHE.clear()
+    _warn_legacy("clear_plan_cache()", "Planner.cache.clear()")
+    Planner.cache.clear()
 
 
 def plan_cache_size() -> int:
-    return len(_CACHE)
+    _warn_legacy("plan_cache_size()", "Planner.cache.size()")
+    return Planner.cache.size()
 
 
 def save_plan_cache(path: str) -> int:
-    """Dump every cached plan as a JSON list; returns the count written."""
-    with _CACHE_LOCK:
-        plans = list(_CACHE.values())
-    with open(path, "w") as f:
-        json.dump([p.to_dict() for p in plans], f, indent=1)
-    return len(plans)
+    _warn_legacy("save_plan_cache()", "Planner.cache.save()")
+    return Planner.cache.save(path)
 
 
 def load_plan_cache(path: str) -> int:
-    """Pre-populate the cache from a JSON dump; returns the count loaded."""
-    with open(path) as f:
-        entries = json.load(f)
-    n = 0
-    with _CACHE_LOCK:
-        for d in entries:
-            p = ExecutionPlan.from_dict(d)
-            _CACHE.setdefault((p.op, p.target), p)
-            n += 1
-    return n
+    _warn_legacy("load_plan_cache()", "Planner.cache.load()")
+    return Planner.cache.load(path)
 
 
 # ---------------------------------------------------------------------------
@@ -472,22 +573,45 @@ def _plan_attention(op: AttentionSpec, target: HardwareTarget) -> ExecutionPlan:
         efficiency=vol / max(lb, 1.0), dtypes=_plan_dtypes(prec))
 
 
+def warn_legacy_kernel_kwargs(fn: str, **passed) -> None:
+    """Emit the one-PR deprecation warning for retired kernel kwargs
+    (``target=``/``tiles=``): execution policy now rides a single
+    ``ctx: ExecutionContext``. (``plan=`` stays — it is the dispatcher's and
+    the autotuner's explicit-plan handoff.) Lint VRF015 flags new in-repo
+    uses of the legacy kwargs."""
+    names = [k for k, v in sorted(passed.items()) if v is not None]
+    if names:
+        warnings.warn(
+            f"legacy kernel kwargs {names} on {fn}(): pass "
+            "ctx=ExecutionContext(target=..., interpret=...) instead",
+            DeprecationWarning, stacklevel=3)
+
+
 def resolve_kernel_plan(
     op: OpSpec,
     plan: Optional[ExecutionPlan] = None,
     target: Optional[HardwareTarget] = None,
     tiles: Optional[Tuple[int, ...]] = None,
     interpret: Optional[bool] = None,
+    ctx: Optional[Any] = None,
 ) -> Tuple[Tuple[int, ...], bool]:
     """Shared kernel-side resolution of (tiles, interpret).
 
     ``op`` is the spec the kernel built from its actual arrays (precision
     included). Priority: explicit legacy ``tiles``, then a caller-supplied
-    ``plan`` (validated for geometry and precision), then a fresh plan for
-    ``target``. One implementation so conv2d/matmul/... cannot diverge."""
+    ``plan`` (validated for geometry and precision), then a fresh plan via
+    :func:`resolve_plan` — for ``ctx.target`` (autotune-aware, any object
+    with ``target``/``interpret``/``autotune`` attributes; duck-typed so the
+    kernel layer needs no ``repro.ops`` import) or legacy ``target``. One
+    implementation so conv2d/matmul/... cannot diverge."""
+    if ctx is not None:
+        if target is None:
+            target = ctx.target
+        if interpret is None:
+            interpret = getattr(ctx, "interpret", None)
     if tiles is None and plan is None:
-        # the parameter shadows the module-level entry point
-        plan = globals()["plan"](op, target or TPU_V5E)
+        plan, _ = resolve_plan(op, target or TPU_V5E,
+                               autotune=getattr(ctx, "autotune", None))
     if plan is not None:
         if not isinstance(plan.op, type(op)) or (
                 dataclasses.replace(plan.op, prec=None)
@@ -519,10 +643,21 @@ def register_plan_audit_hook(fn: Callable[[ExecutionPlan], None]) -> None:
         _PLAN_AUDIT_HOOKS.append(fn)
 
 
-def plan(op: Union[OpSpec, ConvShape], target: HardwareTarget = TPU_V5E
-         ) -> ExecutionPlan:
-    """Plan one op for one target. Memoized: repeated calls with an equal
-    (op, target) pair return the identical ExecutionPlan object."""
+def _memoize_plan(key: Tuple[OpSpec, HardwareTarget], built: ExecutionPlan
+                  ) -> ExecutionPlan:
+    with _CACHE_LOCK:
+        while len(_CACHE) >= PLAN_CACHE_MAX:
+            _CACHE.pop(next(iter(_CACHE)))  # FIFO eviction of the oldest plan
+        # first writer wins so concurrent planners still converge on one object
+        return _CACHE.setdefault(key, built)
+
+
+def analytic_plan(op: Union[OpSpec, ConvShape],
+                  target: HardwareTarget = TPU_V5E) -> ExecutionPlan:
+    """Solve the blocking LP for one (op, target) pair. Memoized: repeated
+    calls with an equal pair return the identical ExecutionPlan object. A
+    tuned plan previously memoized for the pair (its ``tuned`` section set)
+    is returned as-is — the cache holds one winner per key."""
     op = as_op_spec(op)
     key = (op, target)
     with _CACHE_LOCK:
@@ -537,8 +672,94 @@ def plan(op: Union[OpSpec, ConvShape], target: HardwareTarget = TPU_V5E
         built = _plan_matmul(op, target)
     for hook in _PLAN_AUDIT_HOOKS:
         hook(built)
-    with _CACHE_LOCK:
-        while len(_CACHE) >= PLAN_CACHE_MAX:
-            _CACHE.pop(next(iter(_CACHE)))  # FIFO eviction of the oldest plan
-        # first writer wins so concurrent planners still converge on one object
-        return _CACHE.setdefault(key, built)
+    return _memoize_plan(key, built)
+
+
+def resolve_plan(
+    op: Union[OpSpec, ConvShape],
+    target: HardwareTarget = TPU_V5E,
+    explicit: Optional[ExecutionPlan] = None,
+    autotune: Optional[Any] = None,
+) -> Tuple[ExecutionPlan, str]:
+    """THE shared plan-resolution path — ``ctx.plan()``, ``ops.explain``,
+    ``resolve_kernel_plan`` and :class:`Planner` all funnel through here, so
+    an explicitly-passed plan, a cached tuned plan, and a fresh analytic plan
+    are distinguishable everywhere. Returns ``(plan, source)`` with source in
+    ``"explicit"`` (caller-supplied, returned untouched) > ``"tuned"`` (a
+    TuningRecord exists for the pair — or ``autotune`` is a truthy
+    :class:`~repro.plan.autotune.AutotunePolicy` / ``True`` and the op is
+    searchable, running the frontier search once) > ``"analytic"``."""
+    if explicit is not None:
+        return explicit, "explicit"
+    op = as_op_spec(op)
+    from . import autotune as _autotune
+
+    tuned = _autotune.lookup_plan(op, target)
+    if tuned is not None:
+        return tuned, "tuned"
+    policy = _autotune.AutotunePolicy.coerce(autotune)
+    if policy is not None and _autotune.supports(op, target):
+        return _autotune.autotune(op, target, policy=policy), "tuned"
+    return analytic_plan(op, target), "analytic"
+
+
+def plan(op: Union[OpSpec, ConvShape], target: HardwareTarget = TPU_V5E
+         ) -> ExecutionPlan:
+    """Deprecated module-level entry point (use ``Planner(target).plan(op)``):
+    resolves through :func:`resolve_plan`, so a tuned plan cached for the
+    pair is returned over the analytic one."""
+    _warn_legacy("plan()", "Planner(target).plan(op)")
+    return resolve_plan(op, target)[0]
+
+
+class Planner:
+    """The one public planning front door.
+
+    ``Planner(target, quant=None, autotune=None)``:
+
+      * ``quant``    - optional quantized storage policy; a non-None spec is
+                       attached via ``target.with_quant`` so every plan prices
+                       the quantized stream widths;
+      * ``autotune`` - ``None`` (analytic only), ``True`` (default
+                       :class:`~repro.plan.autotune.AutotunePolicy`), or a
+                       policy instance: ``.plan()`` then runs the measured
+                       frontier search on first sight of a searchable op and
+                       serves the tuned winner from the TuningRecord store
+                       afterwards.
+
+    ``.plan(op)`` resolves (tuned > analytic); ``.resolve(op, explicit=...)``
+    additionally reports the plan source; ``.autotune(op)`` forces a search.
+    ``Planner.cache`` is the process-wide :class:`PlanCache` (save/load/
+    clear/size), shared by every instance."""
+
+    cache: PlanCache = PlanCache()
+
+    def __init__(self, target: HardwareTarget = TPU_V5E, quant: Any = None,
+                 autotune: Any = None):
+        if quant is not None:
+            target = target.with_quant(quant)
+        self.target = target
+        from . import autotune as _autotune
+
+        self.autotune_policy = _autotune.AutotunePolicy.coerce(autotune)
+
+    def plan(self, op: Union[OpSpec, ConvShape]) -> ExecutionPlan:
+        return self.resolve(op)[0]
+
+    def resolve(self, op: Union[OpSpec, ConvShape],
+                explicit: Optional[ExecutionPlan] = None
+                ) -> Tuple[ExecutionPlan, str]:
+        return resolve_plan(op, self.target, explicit=explicit,
+                            autotune=self.autotune_policy)
+
+    def autotune(self, op: Union[OpSpec, ConvShape],
+                 policy: Any = None) -> ExecutionPlan:
+        """Run (or reuse) the measured frontier search for ``op`` and return
+        the tuned plan. Raises TypeError for ops the frontier enumerator
+        cannot search (attention plans are closed-form)."""
+        from . import autotune as _autotune
+
+        pol = _autotune.AutotunePolicy.coerce(
+            policy if policy is not None
+            else (self.autotune_policy or True))
+        return _autotune.autotune(op, self.target, policy=pol)

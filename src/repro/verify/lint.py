@@ -27,6 +27,17 @@ Source rules (AST, so prose in comments/docstrings never trips them):
           on recoverability; a bare RuntimeError is unclassifiable.
           Re-raises (``raise`` with no exception) and other exception
           types are untouched.
+  VRF015  legacy kernel kwargs outside ``kernels/`` — a call to a public
+          kernel entry point (conv2d, matmul, conv2d_q, matmul_q,
+          conv2d_shard, conv2d_im2col) passing ``plan=``, ``target=`` or
+          ``tiles=`` keywords. Execution policy rides one
+          ``ctx=ExecutionContext(...)`` since the planning-API redesign;
+          the old kwargs survive as one-release DeprecationWarning shims,
+          and this rule keeps new in-repo uses from creeping back in.
+          The dispatch adapters in ``ops/registry.py`` import kernels
+          under private aliases (``_conv2d_pallas`` …) for their
+          explicit-plan handoff, so the terminal-name match exempts them
+          by construction.
 
 Registry rules (imported live, so they track what's actually registered):
 
@@ -77,6 +88,14 @@ _NARROW_DTYPES = frozenset({
 })
 # accumulation dtypes wide enough to satisfy VRF013
 _WIDE_ACCUM = frozenset({"float32", "float64", "int32", "int64"})
+
+# public kernel entry points whose legacy kwargs VRF015 polices
+_KERNEL_ENTRY_POINTS = frozenset({
+    "conv2d", "matmul", "conv2d_q", "matmul_q", "conv2d_shard",
+    "conv2d_im2col",
+})
+# the retired per-call kwargs (now carried by ExecutionContext)
+_LEGACY_KERNEL_KWARGS = frozenset({"plan", "target", "tiles"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +185,15 @@ class _Checker(ast.NodeVisitor):
                         "VRF003", self.rel, node.lineno,
                         f"jnp.repeat on KV tensor {arg!r} re-materializes "
                         "the cache (keep GQA heads factored)"))
+            elif callee in _KERNEL_ENTRY_POINTS:
+                legacy = sorted(
+                    kw.arg for kw in node.keywords
+                    if kw.arg in _LEGACY_KERNEL_KWARGS)
+                if legacy:
+                    self.found.append(Violation(
+                        "VRF015", self.rel, node.lineno,
+                        f"legacy kernel kwargs {legacy} on {callee}() — "
+                        "pass ctx=ExecutionContext(...) instead"))
         self.generic_visit(node)
 
 

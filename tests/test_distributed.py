@@ -24,7 +24,7 @@ from repro.core.conv_model import ConvShape
 from repro.core.parallel_tiling import ParallelBlocking
 from repro.distributed import DistConvGeometry, dist_grid
 from repro.launch import fake_devices, make_conv_mesh
-from repro.plan import ConvSpec, ExecutionPlan, TPU_V5E, plan
+from repro.plan import ConvSpec, ExecutionPlan, Planner, TPU_V5E
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 N_DEV = len(jax.devices())
@@ -145,7 +145,8 @@ def test_plan_parallel_section_roundtrip():
     from repro.plan import PLAN_FORMAT_VERSION
 
     tgt = TPU_V5E.with_mesh((("N", 2), ("cI", 2), ("hO", 2), ("wO", 1)))
-    p = plan(ConvSpec(N=8, c_I=16, c_O=16, w_O=16, h_O=16, w_F=3, h_F=3), tgt)
+    p = Planner(tgt).plan(
+        ConvSpec(N=8, c_I=16, c_O=16, w_O=16, h_O=16, w_F=3, h_F=3))
     assert p.parallel is not None
     assert p.parallel.P == 8
     assert math.prod(dict(p.parallel.grid).values()) == 8
@@ -156,8 +157,8 @@ def test_plan_parallel_section_roundtrip():
 
 
 def test_plan_v2_dump_loads_with_parallel_none():
-    p = plan(ConvSpec(N=4, c_I=8, c_O=8, w_O=8, h_O=8, w_F=3, h_F=3),
-             TPU_V5E)
+    p = Planner(TPU_V5E).plan(
+             ConvSpec(N=4, c_I=8, c_O=8, w_O=8, h_O=8, w_F=3, h_F=3))
     d = p.to_dict()
     d.pop("parallel")
     d["version"] = 2
@@ -167,8 +168,8 @@ def test_plan_v2_dump_loads_with_parallel_none():
 
 
 def test_single_device_plan_has_no_parallel_section():
-    p = plan(ConvSpec(N=4, c_I=8, c_O=8, w_O=8, h_O=8, w_F=3, h_F=3),
-             TPU_V5E)
+    p = Planner(TPU_V5E).plan(
+             ConvSpec(N=4, c_I=8, c_O=8, w_O=8, h_O=8, w_F=3, h_F=3))
     assert p.parallel is None and p.sharding is None
 
 

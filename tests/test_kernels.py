@@ -12,7 +12,7 @@ from repro.kernels.conv1d import conv1d_causal
 from repro.kernels.conv2d import conv2d
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.matmul import matmul
-from repro.plan import ConvSpec, MatmulSpec, TPU_V5E, plan
+from repro.plan import ConvSpec, MatmulSpec, Planner, TPU_V5E
 
 KEY = jax.random.PRNGKey(0)
 K2 = jax.random.PRNGKey(1)
@@ -42,8 +42,8 @@ def test_matmul_sweep(m, n, k, dtype):
 
 def test_matmul_tiles_divide_padded_problem():
     for (m, n, k) in [(4096, 4096, 4096), (512, 11008, 2048), (7, 13, 5)]:
-        bm, bn, bk = plan(MatmulSpec(m, n, k, prec=Precision(0.5, 0.5, 1.0)),
-                          TPU_V5E).matmul_tiles()
+        bm, bn, bk = Planner(TPU_V5E).plan(
+            MatmulSpec(m, n, k, prec=Precision(0.5, 0.5, 1.0))).matmul_tiles()
         assert bm >= 1 and bn >= 1 and bk >= 1
 
 
@@ -74,7 +74,7 @@ def test_conv2d_tiles_from_lp_fit_vmem():
     N, cI, cO, hO, wO, hF, wF = 64, 64, 256, 56, 56, 3, 3
     spec = ConvSpec(N=N, c_I=cI, c_O=cO, w_O=wO, h_O=hO, w_F=wF, h_F=hF,
                     prec=Precision(0.5, 0.5, 1.0))
-    ep = plan(spec, TPU_V5E)
+    ep = Planner(TPU_V5E).plan(spec)
     bN, bcI, bcO, bh, bw = ep.conv_tiles()
     assert all(b >= 1 for b in ep.conv_tiles())
     fp = ep.kernel_footprints()
@@ -95,7 +95,8 @@ def test_conv2d_spatial_tiling_agrees(tiles, stride):
     that do not divide h_O/w_O, and windows sharing h_F - s row halos."""
     x = jax.random.normal(KEY, (2, 4, 25, 25), jnp.float32)
     w = jax.random.normal(K2, (8, 4, 3, 3), jnp.float32)
-    got = conv2d(x, w, stride=stride, tiles=tiles)
+    with pytest.deprecated_call(match="legacy kernel kwargs"):
+        got = conv2d(x, w, stride=stride, tiles=tiles)
     want = ref.conv2d_ref(x, w, stride=stride)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
@@ -107,7 +108,8 @@ def test_conv2d_no_halo_when_unit_filter():
     x = jax.random.normal(KEY, (2, 6, 16, 16), jnp.float32)
     w = jax.random.normal(K2, (8, 6, 1, 1), jnp.float32)
     for stride in ((1, 1), (2, 2)):
-        got = conv2d(x, w, stride=stride, tiles=(1, 6, 8, 3, 5))
+        with pytest.deprecated_call(match="legacy kernel kwargs"):
+            got = conv2d(x, w, stride=stride, tiles=(1, 6, 8, 3, 5))
         want = ref.conv2d_ref(x, w, stride=stride)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
@@ -119,7 +121,7 @@ def test_conv2d_plan_tiles_spatial_when_footprint_demands():
     have run this shape inside VMEM at all."""
     spec = ConvSpec(N=1, c_I=8, c_O=8, w_O=512, h_O=512, w_F=3, h_F=3,
                     prec=Precision(0.5, 0.5, 1.0))
-    ep = plan(spec, TPU_V5E)
+    ep = Planner(TPU_V5E).plan(spec)
     bN, bcI, bcO, bh, bw = ep.conv_tiles()
     assert bh < 512 or bw < 512
     from repro.core.tiling import TPU_VMEM_WORDS

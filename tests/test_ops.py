@@ -11,7 +11,7 @@ import pytest
 
 from repro import ops
 from repro.kernels import ref
-from repro.plan import CPU_INTERPRET, GEMMINI, MatmulSpec, TPU_V5E, plan
+from repro.plan import CPU_INTERPRET, GEMMINI, MatmulSpec, Planner, TPU_V5E
 from repro.models import layers
 from repro.models.config import ModelConfig
 
@@ -255,8 +255,8 @@ def test_dispatch_resolves_execution_plan():
     b = jax.random.normal(K2, (64, 256))
     dec = ops.explain("matmul", PALLAS, spec_args=(a, b))
     assert dec.plan is not None
-    want = plan(MatmulSpec(128, 256, 64,
-                           prec=dec.plan.op.prec), TPU_V5E)
+    want = Planner(TPU_V5E).plan(MatmulSpec(128, 256, 64,
+                                            prec=dec.plan.op.prec))
     assert dec.plan is want  # same memoized object: one process-wide cache
     # xla delegates tiling to the compiler: no LP plan resolved
     assert ops.explain("matmul", XLA, spec_args=(a, b)).plan is None

@@ -15,8 +15,8 @@ from repro.kernels.matmul import matmul
 from repro.kernels.ref import conv2d_ref, matmul_ref
 from repro.plan import (CPU_INTERPRET, GEMMINI, PLAN_FORMAT_VERSION, TPU_V5E,
                         AttentionSpec, ConvSpec, ExecutionPlan, HardwareTarget,
-                        MatmulSpec, get_target, load_plan_cache, plan,
-                        save_plan_cache)
+                        MatmulSpec, Planner, TunedSection, get_target,
+                        load_plan_cache, plan, save_plan_cache)
 
 KEY = jax.random.PRNGKey(0)
 K2 = jax.random.PRNGKey(1)
@@ -25,17 +25,22 @@ CONV = ConvSpec(N=4, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3)
 GEMM = MatmulSpec(256, 512, 128, prec=Precision(0.5, 0.5, 1.0))
 
 
+def _plan(op, target):
+    """The post-redesign planning path (no deprecation warning)."""
+    return Planner(target).plan(op)
+
+
 # ---------------------------------------------------------------------------
 # plan cache
 # ---------------------------------------------------------------------------
 
 def test_plan_cache_returns_identical_object():
-    assert plan(CONV, TPU_V5E) is plan(CONV, TPU_V5E)
-    assert plan(GEMM, TPU_V5E) is plan(GEMM, TPU_V5E)
+    assert _plan(CONV, TPU_V5E) is _plan(CONV, TPU_V5E)
+    assert _plan(GEMM, TPU_V5E) is _plan(GEMM, TPU_V5E)
     # equal-by-value keys hit the same entry even via fresh objects
-    assert plan(dataclasses.replace(CONV), TPU_V5E) is plan(CONV, TPU_V5E)
+    assert _plan(dataclasses.replace(CONV), TPU_V5E) is _plan(CONV, TPU_V5E)
     # a different target is a different plan
-    assert plan(CONV, CPU_INTERPRET) is not plan(CONV, TPU_V5E)
+    assert _plan(CONV, CPU_INTERPRET) is not _plan(CONV, TPU_V5E)
 
 
 def test_target_presets_and_registry():
@@ -56,7 +61,7 @@ def test_target_presets_and_registry():
     (MatmulSpec(4096, 2048, 512), TPU_V5E.with_mesh((("data", 4), ("model", 2)))),
 ])
 def test_plan_json_roundtrip(op, target):
-    ep = plan(op, target)
+    ep = _plan(op, target)
     back = ExecutionPlan.from_json(ep.to_json())
     assert back == ep
     assert back.op == op and back.target == target
@@ -70,7 +75,7 @@ def test_v1_conv_plan_json_upgrades():
     """Pre-spatial-tiling (format v1) conv dumps carried 3-tuple tiles and a
     3-axis grid; loading one must yield a working 5-tuple plan (spatial kept
     whole, the old kernel behavior) instead of crashing the new accessors."""
-    ep = plan(CONV, TPU_V5E)
+    ep = _plan(CONV, TPU_V5E)
     d = ep.to_dict()
     d["version"] = 1
     d["tiles"] = d["tiles"][:3]
@@ -82,19 +87,32 @@ def test_v1_conv_plan_json_upgrades():
     back.pallas_specs()
 
 
-def test_plan_json_upgrade_chain_v1_to_v5():
+def test_plan_json_upgrade_chain_v1_to_v6():
     """Walk one conv dump through every historical format. v1 (3-tuple tiles,
     3-axis grid, no ``parallel``), v2 (spatial tiles, still no ``parallel``),
-    v3 (``parallel`` present), v4 (no per-operand ``dtypes``), and current v5
-    fixtures must all load, and each upgraded plan must agree with the live
-    plan on everything its era recorded."""
+    v3 (``parallel`` present), v4 (no per-operand ``dtypes``), v5 (no
+    ``tuned`` section), and current v6 fixtures must all load, and each
+    upgraded plan must agree with the live plan on everything its era
+    recorded — including the ``tuned`` autotune provenance, round-tripped
+    when present and defaulted to None on every pre-v6 format."""
     meshed = TPU_V5E.with_mesh((("data", 4), ("model", 2)))
-    ep = plan(CONV, meshed)
-    v5 = ep.to_dict()
-    assert v5["version"] == PLAN_FORMAT_VERSION == 5
-    assert v5["parallel"] is not None
-    assert dict(v5["dtypes"])["accum"] == "float32"
+    ep = _plan(CONV, meshed)
+    v6 = ep.to_dict()
+    assert v6["version"] == PLAN_FORMAT_VERSION == 6
+    assert v6["parallel"] is not None
+    assert dict(v6["dtypes"])["accum"] == "float32"
+    assert v6["tuned"] is None  # analytic plan: no autotune provenance
 
+    # a tuned v6 dump round-trips its provenance section
+    ts = TunedSection(source="roofline", candidates_timed=7,
+                      winner_words=123.0, winner_seconds=4.5e-6)
+    tuned_ep = dataclasses.replace(ep, tuned=ts)
+    back_tuned = ExecutionPlan.from_dict(tuned_ep.to_dict())
+    assert back_tuned == tuned_ep and back_tuned.tuned == ts
+
+    # v5 predates the tuned section — the key is absent.
+    v5 = {k: v for k, v in v6.items() if k != "tuned"}
+    v5["version"] = 5
     # v4 predates the per-operand dtypes section — the key is absent.
     v4 = {k: v for k, v in v5.items() if k != "dtypes"}
     v4["version"] = 4
@@ -108,7 +126,8 @@ def test_plan_json_upgrade_chain_v1_to_v5():
               grid=[v4["grid"][0], v4["grid"][1], v4["grid"][4]])
 
     no_dtypes = dataclasses.replace(ep, dtypes=())
-    assert ExecutionPlan.from_dict(v5) == ep
+    assert ExecutionPlan.from_dict(v6) == ep
+    assert ExecutionPlan.from_dict(v5) == ep  # tuned defaults to None
     assert ExecutionPlan.from_dict(v4) == no_dtypes
     assert ExecutionPlan.from_dict(v3) == no_dtypes
     assert ExecutionPlan.from_dict(v2) == dataclasses.replace(
@@ -116,20 +135,22 @@ def test_plan_json_upgrade_chain_v1_to_v5():
 
     from_v1 = ExecutionPlan.from_dict(v1)
     assert from_v1.parallel is None
-    assert from_v1.tiles == tuple(v5["tiles"][:3]) + (CONV.h_O, CONV.w_O)
-    assert from_v1.grid == (v5["grid"][0], v5["grid"][1], 1, 1, v5["grid"][4])
+    assert from_v1.tiles == tuple(v6["tiles"][:3]) + (CONV.h_O, CONV.w_O)
+    assert from_v1.grid == (v6["grid"][0], v6["grid"][1], 1, 1, v6["grid"][4])
     assert from_v1.sharding == ep.sharding
 
     for back in (from_v1, ExecutionPlan.from_dict(v2),
-                 ExecutionPlan.from_dict(v3), ExecutionPlan.from_dict(v4)):
+                 ExecutionPlan.from_dict(v3), ExecutionPlan.from_dict(v4),
+                 ExecutionPlan.from_dict(v5)):
         assert back.op == ep.op and back.target == ep.target
         assert back.lower_bound == ep.lower_bound
+        assert back.tuned is None
         assert back.kernel_footprints()["output"] > 0
         back.pallas_specs()
 
 
 def test_attention_plan_v4_roundtrip_and_future_version_rejected():
-    ep = plan(AttentionSpec(B=2, H=8, KV=8, Lq=128, Lk=128, hd=64), TPU_V5E)
+    ep = _plan(AttentionSpec(B=2, H=8, KV=8, Lq=128, Lk=128, hd=64), TPU_V5E)
     back = ExecutionPlan.from_dict(ep.to_dict())
     assert back == ep and isinstance(back.op, AttentionSpec)
     bad = dict(ep.to_dict(), version=PLAN_FORMAT_VERSION + 1)
@@ -138,13 +159,34 @@ def test_attention_plan_v4_roundtrip_and_future_version_rejected():
 
 
 def test_plan_cache_dump_load(tmp_path):
-    ep = plan(CONV, TPU_V5E)
+    ep = _plan(CONV, TPU_V5E)
     path = str(tmp_path / "plans.json")
-    assert save_plan_cache(path) >= 1
-    n = load_plan_cache(path)
+    assert Planner.cache.save(path) >= 1
+    n = Planner.cache.load(path)
     assert n >= 1
     # the loaded entries are equal-by-value to the live ones
-    assert plan(CONV, TPU_V5E) == ep
+    assert _plan(CONV, TPU_V5E) == ep
+
+
+def test_legacy_planning_shims_warn_and_delegate(tmp_path):
+    """The pre-redesign module-level surface still works but deprecates:
+    every shim warns (message prefixed "legacy" so CI's -W error leg can
+    target them) and delegates to the Planner front door."""
+    ep = _plan(CONV, TPU_V5E)
+    with pytest.deprecated_call(match="legacy planning API"):
+        assert plan(CONV, TPU_V5E) is ep
+    path = str(tmp_path / "plans.json")
+    with pytest.deprecated_call(match="legacy planning API"):
+        assert save_plan_cache(path) == Planner.cache.size() + len(
+            __import__("repro.plan.autotune", fromlist=["records"]).records())
+    with pytest.deprecated_call(match="legacy planning API"):
+        assert load_plan_cache(path) >= 1
+    from repro.plan import plan_cache_size, clear_plan_cache
+    with pytest.deprecated_call(match="legacy planning API"):
+        assert plan_cache_size() == Planner.cache.size()
+    with pytest.deprecated_call(match="legacy planning API"):
+        clear_plan_cache()
+    assert Planner.cache.size() == 0
 
 
 # ---------------------------------------------------------------------------
@@ -156,9 +198,10 @@ def test_conv2d_plan_matches_legacy_tiles():
     w = jax.random.normal(K2, (16, 8, 3, 3), jnp.float32)
     spec = ConvSpec(N=2, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3,
                     prec=Precision(1.0, 1.0, 1.0))
-    ep = plan(spec, TPU_V5E)
-    got_plan = conv2d(x, w, plan=ep)
-    got_tiles = conv2d(x, w, tiles=ep.conv_tiles())
+    ep = _plan(spec, TPU_V5E)
+    got_plan = conv2d(x, w, plan=ep)  # explicit plan handoff: no warning
+    with pytest.deprecated_call(match="legacy kernel kwargs"):
+        got_tiles = conv2d(x, w, tiles=ep.conv_tiles())
     got_default = conv2d(x, w)  # plans internally through the same cache
     np.testing.assert_array_equal(np.asarray(got_plan), np.asarray(got_tiles))
     np.testing.assert_array_equal(np.asarray(got_plan), np.asarray(got_default))
@@ -170,9 +213,10 @@ def test_conv2d_plan_matches_legacy_tiles():
 def test_matmul_plan_matches_legacy_tiles():
     a = jax.random.normal(KEY, (100, 77), jnp.float32)
     b = jax.random.normal(K2, (77, 130), jnp.float32)
-    ep = plan(MatmulSpec(100, 130, 77, prec=Precision(1.0, 1.0, 1.0)), TPU_V5E)
+    ep = _plan(MatmulSpec(100, 130, 77, prec=Precision(1.0, 1.0, 1.0)), TPU_V5E)
     got_plan = matmul(a, b, plan=ep)
-    got_tiles = matmul(a, b, tiles=ep.matmul_tiles())
+    with pytest.deprecated_call(match="legacy kernel kwargs"):
+        got_tiles = matmul(a, b, tiles=ep.matmul_tiles())
     np.testing.assert_array_equal(np.asarray(got_plan), np.asarray(got_tiles))
     np.testing.assert_allclose(np.asarray(got_plan),
                                np.asarray(matmul_ref(a, b)),
@@ -182,17 +226,17 @@ def test_matmul_plan_matches_legacy_tiles():
 def test_kernel_rejects_mismatched_plan():
     x = jax.random.normal(KEY, (2, 8, 12, 12), jnp.float32)
     w = jax.random.normal(K2, (16, 8, 3, 3), jnp.float32)
-    wrong = plan(ConvSpec(N=4, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3),
-                 TPU_V5E)
+    wrong = _plan(ConvSpec(N=4, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3),
+                  TPU_V5E)
     with pytest.raises(ValueError):
         conv2d(x, w, plan=wrong)
     a = jax.random.normal(KEY, (64, 32), jnp.float32)
     b = jax.random.normal(K2, (32, 48), jnp.float32)
     with pytest.raises(ValueError):
-        matmul(a, b, plan=plan(MatmulSpec(65, 48, 32), TPU_V5E))
+        matmul(a, b, plan=_plan(MatmulSpec(65, 48, 32), TPU_V5E))
     # a plan solved for narrower input streams than the data must be rejected
-    bf16_plan = plan(MatmulSpec(64, 48, 32, prec=Precision(0.5, 0.5, 1.0)),
-                     TPU_V5E)
+    bf16_plan = _plan(MatmulSpec(64, 48, 32, prec=Precision(0.5, 0.5, 1.0)),
+                      TPU_V5E)
     with pytest.raises(ValueError, match="word input streams"):
         matmul(a, b, plan=bf16_plan)
 
@@ -207,8 +251,8 @@ def test_legacy_shims_retired():
         assert not hasattr(mod, "plan_conv_tiles")
         assert not hasattr(mod, "plan_tiles")
     # the replacement path produces the same aligned tiles the shims did
-    bm, bn, bk = plan(MatmulSpec(512, 512, 512, prec=Precision(0.5, 0.5, 1.0)),
-                      TPU_V5E).matmul_tiles()
+    bm, bn, bk = _plan(MatmulSpec(512, 512, 512, prec=Precision(0.5, 0.5, 1.0)),
+                       TPU_V5E).matmul_tiles()
     assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0
 
 
@@ -219,7 +263,7 @@ def test_legacy_shims_retired():
 @pytest.mark.parametrize("lname", ["conv2_x", "conv4_x"])
 def test_gemmini_plans_respect_macc_footprint(lname):
     s = resnet50_layers(1000)[lname].with_precision(INT8_ACC32)
-    ep = plan(ConvSpec.from_shape(s), GEMMINI)
+    ep = _plan(ConvSpec.from_shape(s), GEMMINI)
     mem = GEMMINI.memory_model()
     fp = ep.footprints()
     assert fp["input"] + fp["filter"] <= mem.M_eff
@@ -233,12 +277,12 @@ def test_gemmini_plans_respect_macc_footprint(lname):
 
 def test_mesh_target_attaches_sharding_plan():
     target = TPU_V5E.with_mesh((("data", 16), ("model", 16)))
-    ep = plan(MatmulSpec(65536, 11008, 2048), target)
+    ep = _plan(MatmulSpec(65536, 11008, 2048), target)
     assert ep.sharding is not None
     assert ep.sharding.binding.get("N") == "data"
     assert ep.sharding.binding.get("cO") == "model"
     # single-device plans carry no sharding
-    assert plan(GEMM, TPU_V5E).sharding is None
+    assert _plan(GEMM, TPU_V5E).sharding is None
 
 
 def test_hardware_target_from_dict_roundtrip():
@@ -249,7 +293,7 @@ def test_hardware_target_from_dict_roundtrip():
 def test_plan_pallas_specs_shapes():
     from jax.experimental.pallas import tpu as pltpu
 
-    ep = plan(GEMM, TPU_V5E)
+    ep = _plan(GEMM, TPU_V5E)
     grid, in_specs, out_spec = ep.pallas_specs()
     assert grid == ep.grid and len(in_specs) == 2
     bm, bn, bk = ep.tiles
@@ -257,7 +301,7 @@ def test_plan_pallas_specs_shapes():
     # themselves); only the output block is lowered via a blocked BlockSpec
     assert all(s.memory_space == pltpu.ANY for s in in_specs)
     assert out_spec.block_shape == (bm, bn)
-    cep = plan(CONV, TPU_V5E)
+    cep = _plan(CONV, TPU_V5E)
     cgrid, _, cout = cep.pallas_specs()
     assert cgrid == cep.grid and len(cgrid) == 5
     bN, bcI, bcO, bh, bw = cep.conv_tiles()

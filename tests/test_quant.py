@@ -22,7 +22,7 @@ from repro.core.bounds import (attention_bound, mixed_precision_attention_bound,
 from repro.core.conv_model import ConvShape, Precision
 from repro.models import transformer as T
 from repro.plan import TPU_V5E, HardwareTarget, get_target
-from repro.plan.planner import PLAN_FORMAT_VERSION, ExecutionPlan, plan
+from repro.plan.planner import PLAN_FORMAT_VERSION, ExecutionPlan, Planner
 from repro.plan.ops import ConvSpec
 from repro.quant import (INT8_SPEC, KV_INT8_SPEC, PrecisionSpec, dequantize,
                          dtype_words, fold_output_scales,
@@ -198,9 +198,9 @@ def test_precision_spec_validation_and_dict_roundtrip():
 def test_plan_v5_carries_operand_dtypes():
     spec = ConvSpec(N=4, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3,
                     prec=INT8_SPEC.precision)
-    ep = plan(spec, TPU_V5E)
+    ep = Planner(TPU_V5E).plan(spec)
     d = ep.to_dict()
-    assert d["version"] == PLAN_FORMAT_VERSION == 5
+    assert d["version"] == PLAN_FORMAT_VERSION == 6
     dmap = dict(d["dtypes"])
     assert dmap["input"] == "int8" and dmap["accum"] == "float32"
     assert ExecutionPlan.from_dict(d) == ep
@@ -219,7 +219,7 @@ def test_roofline_words_to_bytes_per_operand():
     assert words_to_bytes(10) == 40.0
     spec = ConvSpec(N=4, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3,
                     prec=INT8_SPEC.precision)
-    ep = plan(spec, TPU_V5E)
+    ep = Planner(TPU_V5E).plan(spec)
     per = words_to_bytes({"input": 1000, "output": 1000}, dtypes=ep.dtypes)
     assert per["input"] == 1000.0    # int8: one byte per element
     assert per["output"] == 2000.0   # bf16: two

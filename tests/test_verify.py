@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro import ops
-from repro.plan import ConvSpec, MatmulSpec, TPU_V5E, plan
+from repro.plan import ConvSpec, MatmulSpec, Planner, TPU_V5E
 from repro.verify import (audit_access_plan, audit_decision,
                           check_schedule, double_buffered_schedule,
                           validate_execution_plan)
@@ -183,11 +183,11 @@ def test_registry_lint_and_tree_lint_are_clean():
 def test_validate_execution_plan_accepts_real_plans():
     for spec in (ConvSpec(N=4, c_I=8, c_O=16, w_O=10, h_O=10, w_F=3, h_F=3),
                  MatmulSpec(512, 384, 256)):
-        assert validate_execution_plan(plan(spec, TPU_V5E)) == []
+        assert validate_execution_plan(Planner(TPU_V5E).plan(spec)) == []
 
 
 def test_validate_execution_plan_rejects_uncovering_grid():
-    ep = plan(MatmulSpec(512, 384, 256), TPU_V5E)
+    ep = Planner(TPU_V5E).plan(MatmulSpec(512, 384, 256))
     bad = dataclasses.replace(ep, grid=(1, 1, 1), tiles=(8, 8, 8))
     problems = validate_execution_plan(bad)
     assert any("does not cover" in p for p in problems)
